@@ -1,0 +1,104 @@
+"""§Perf hillclimbing driver: re-lower chosen (arch x shape) pairs with one
+change applied, and diff the roofline terms against the recorded baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --pair llama4 --variant moe_blocked
+
+Variants (each encodes one hypothesis from EXPERIMENTS.md §Perf):
+  moe_blocked   — data-shard-blocked MoE dispatch (ctx.MOE_BLOCKS = dp size)
+  zero1         — ZeRO-1 optimizer-state sharding over the data axis
+  no_remat      — disable activation checkpointing (flops down, memory up)
+  combo         — moe_blocked + zero1
+"""
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS first)
+
+import argparse
+import json
+from pathlib import Path
+
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import ctx
+from repro.dist.sharding import zero1_specs
+from repro.launch.dryrun import RESULTS_DIR, run_dryrun, save
+
+PAIRS = {
+    "llama4": ("llama4-scout-17b-a16e", "train_4k"),
+    "granite": ("granite-34b", "train_4k"),
+    "recurrentgemma": ("recurrentgemma-2b", "train_4k"),
+    "phi": ("phi3.5-moe-42b-a6.6b", "train_4k"),
+    "falcon": ("falcon-mamba-7b", "train_4k"),
+}
+
+
+def apply_variant(name: str, arch: str) -> dict:
+    kw = {}
+    if name in ("moe_blocked", "combo"):
+        ctx.MOE_BLOCKS = 16   # data-axis size of the single-pod mesh
+        ctx.MOE_BLOCK_SPECS = (
+            P("data", None, None),             # token blocks over data
+            P("data", "model", None, None),    # expert buffers over model
+        )
+    if name in ("zero1", "combo", "zero1_bf16g"):
+        dryrun.OPT_SPEC_TRANSFORM = zero1_specs
+    if name in ("bf16_grads", "zero1_bf16g"):
+        import jax.numpy as jnp
+        from repro.launch import steps
+        steps.GRAD_DTYPE = jnp.bfloat16
+    if name == "no_remat":
+        kw["remat"] = False
+    return kw
+
+
+def clear_variant():
+    from repro.launch import steps
+    ctx.MOE_BLOCKS = 1
+    ctx.MOE_BLOCK_SPECS = None
+    dryrun.OPT_SPEC_TRANSFORM = None
+    steps.GRAD_DTYPE = None
+
+
+def summarize(rec: dict) -> dict:
+    ca = rec.get("cost_analysis_extrapolated") or rec.get("cost_analysis") or {}
+    coll = rec.get("collectives_extrapolated") or rec.get("collectives") or {}
+    return {
+        "flops_dev": ca.get("flops"),
+        "bytes_dev": ca.get("bytes accessed"),
+        "coll_bytes_dev": coll.get("total_bytes"),
+        "state_gib_dev": rec.get("state_bytes_per_device", 0) / 2**30,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS), required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--no-full", action="store_true",
+                    help="probes only (skip full-depth compile)")
+    args = ap.parse_args()
+    arch, shape = PAIRS[args.pair]
+
+    base_file = RESULTS_DIR / f"16x16_{arch}_{shape}.json"
+    baseline = json.loads(base_file.read_text()) if base_file.exists() else None
+
+    kw = apply_variant(args.variant, arch)
+    try:
+        rec = run_dryrun(arch, shape, multi_pod=False, probes=True, **kw)
+    finally:
+        clear_variant()
+    rec["variant"] = args.variant
+    save(rec, RESULTS_DIR, tag=f"__{args.variant}")
+
+    after = summarize(rec)
+    print(json.dumps({"variant": args.variant, "after": after}, indent=1))
+    if baseline:
+        before = summarize(baseline)
+        print("delta:")
+        for k in after:
+            b, a = before.get(k), after.get(k)
+            if isinstance(b, (int, float)) and isinstance(a, (int, float)) and b:
+                print(f"  {k}: {b:.4g} -> {a:.4g}  ({a / b:.3f}x)")
+
+
+if __name__ == "__main__":
+    main()

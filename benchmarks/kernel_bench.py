@@ -1,0 +1,36 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp reference.
+
+Interpret-mode timings are NOT TPU performance — they validate that the
+kernels run and give a per-call cost for the CI log.  On TPU hardware the
+same pallas_call compiles natively (interpret=False).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.emb_lookup import pooled_lookup
+from repro.kernels.ref import pooled_lookup_ref
+
+
+def _t(fn, *a):
+    fn(*a)
+    t0 = time.perf_counter()
+    fn(*a)
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for B, F, V, E in [(64, 8, 5000, 128), (256, 26, 20000, 512)]:
+        table = jnp.asarray(rng.standard_normal((V, E)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, V, (B, F)), jnp.int32)
+        us_k = _t(lambda t, i: pooled_lookup(t, i).block_until_ready(), table, ids)
+        us_r = _t(lambda t, i: pooled_lookup_ref(t, i).block_until_ready(), table, ids)
+        print(f"kernel.pooled_lookup.B{B}F{F}E{E}.pallas_interpret,{us_k:.0f},ref_us={us_r:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,122 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape), from
+the dry-run JSONs in benchmarks/results/.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+  memory term     = HLO_bytes_per_device / HBM_bw             [s]
+  collective term = collective_bytes_per_device / link_bw     [s]
+
+(cost_analysis reports per-DEVICE quantities under SPMD — calibrated in
+EXPERIMENTS.md §Dry-run — so the "/ chips" in the assignment's formulas is
+already applied.)  HLO flops/bytes use the scan-trip-count-corrected
+extrapolations.  MODEL_FLOPS = 6*N*D for training (2*N*D for single
+forward; N = active params for MoE), and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) flags remat/replication waste.
+
+CPU-backend caveat (documented): XLA-CPU upcasts bf16 matmuls to f32, so
+"bytes accessed" is ~2x a real TPU lowering; collective byte counts parse
+the post-SPMD HLO and are dtype-accurate.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(rec: dict) -> float:
+    from repro.configs import CONFIGS, INPUT_SHAPES
+    cfg = CONFIGS[rec["arch"]]
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_active = rec.get("active_params", cfg.param_count())
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # one decoded token
+
+
+def analyze(rec: dict) -> dict | None:
+    if "skipped" in rec:
+        return None
+    ca = rec.get("cost_analysis_extrapolated") or rec.get("cost_analysis")
+    if not isinstance(ca, dict):
+        return None
+    coll = rec.get("collectives_extrapolated") or rec.get("collectives") or {}
+    chips = CHIPS[rec["mesh"]]
+    flops_dev = ca.get("flops", 0.0)
+    bytes_dev = ca.get("bytes accessed", 0.0)
+    coll_dev = coll.get("total_bytes", 0.0)
+
+    compute_t = flops_dev / PEAK_FLOPS
+    # memory bounds: HLO "bytes accessed" counts EVERY op's operands/results
+    # (no fusion, f32-upcast) -> loose UPPER bound; the lower bound reads
+    # the resident state (weights/opt/cache) once.
+    memory_hi = bytes_dev / 2.0 / HBM_BW    # /2: CPU-backend f32 upcast
+    memory_lo = rec.get("state_bytes_per_device", 0.0) / HBM_BW
+    coll_t = coll_dev / ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_lo,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    terms["memory_hi_s"] = memory_hi
+    mf = model_flops(rec)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": round(mf / max(flops_dev * chips, 1.0), 3),
+        "state_gib_per_device": round(
+            rec.get("state_bytes_per_device", 0) / 2**30, 2),
+        "attn_mode": rec.get("attn_mode", "?"),
+    }
+
+
+def load_all(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS.glob(f"{mesh}_*.json")):
+        rec = json.loads(f.read_text())
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+        elif "skipped" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "skipped": rec["skipped"]})
+    return rows
+
+
+def table(mesh: str = "16x16") -> str:
+    rows = load_all(mesh)
+    hdr = ("arch,shape,compute_s,memory_s,memory_hi_s,collective_s,dominant,"
+           "useful_ratio,state_GiB/dev,attn_mode")
+    lines = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"{r['arch']},{r['shape']},SKIP({r['skipped'][:40]}...)")
+            continue
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['compute_s']:.4f},{r['memory_s']:.4f},"
+            f"{r['memory_hi_s']:.4f},"
+            f"{r['collective_s']:.4f},{r['dominant']},{r['useful_ratio']},"
+            f"{r['state_gib_per_device']},{r['attn_mode']}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    for mesh in ("16x16",):
+        t = table(mesh)
+        print(t)
+        (RESULTS / f"roofline_{mesh}.csv").write_text(t + "\n")
+
+
+if __name__ == "__main__":
+    main()

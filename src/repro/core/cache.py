@@ -1,0 +1,213 @@
+"""Worker embedding caches + PS state machine (paper §3, Fig. 2, §8.1 Emark).
+
+Tracks, for n workers over an id universe of size V:
+
+  * ``present[j, x]`` — x is resident in worker j's cache.
+  * ``latest[j, x]``  — the resident copy is the latest global version.
+  * ``dirty[j, x]``   — worker j holds an unsynchronized gradient for x.
+
+and executes one BSP iteration with on-demand synchronization in three
+phases, counting the three transmission-operation types:
+
+  A. *update push*  — a dirty holder pushes x's gradient iff some OTHER
+     worker needs x this iteration (paper §3 on-demand sync).
+  B. *miss pull*    — a needer whose copy is absent/outdated pulls x; cache
+     insertion may evict victims, and evicting a dirty victim costs an
+     *evict push*.
+  C. train          — needed ids become dirty+latest on their worker; all
+     other copies become stale.
+
+Eviction policies: ``emark`` (§8.1: outdated first, then mark epoch, then
+frequency), ``lru``, ``lfu``.  Ids needed by the current iteration are
+pinned and never evicted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+import numpy as np
+
+__all__ = ["ClusterCache", "IterStats", "Policy"]
+
+Policy = Literal["emark", "lru", "lfu"]
+
+
+@dataclasses.dataclass
+class IterStats:
+    """Per-iteration transmission counts, per worker."""
+
+    miss_pull: np.ndarray     # (n,)
+    update_push: np.ndarray   # (n,)
+    evict_push: np.ndarray    # (n,)
+    lookups: np.ndarray       # (n,) embedding lookups (for hit ratio)
+    hits: np.ndarray          # (n,)
+
+    def cost(self, t_tran: np.ndarray) -> float:
+        ops = self.miss_pull + self.update_push + self.evict_push
+        return float((ops * t_tran).sum())
+
+    def per_worker_cost(self, t_tran: np.ndarray) -> np.ndarray:
+        return (self.miss_pull + self.update_push + self.evict_push) * t_tran
+
+
+class ClusterCache:
+    """Mutable cluster cache state (numpy, simulator-side)."""
+
+    def __init__(
+        self,
+        n_workers: int,
+        vocab: int,
+        capacity: int,
+        policy: Policy = "emark",
+        sync: Literal["on_demand", "eager"] = "on_demand",
+        seed: int = 0,
+    ):
+        self.n = n_workers
+        self.V = vocab
+        self.capacity = int(capacity)
+        self.policy: Policy = policy
+        self.sync = sync   # "eager": push every dirty entry each iteration
+                           # (HET-under-BSP per the paper's evaluation setup)
+        self.present = np.zeros((self.n, vocab), bool)
+        self.latest = np.zeros((self.n, vocab), bool)
+        self.dirty = np.zeros((self.n, vocab), bool)
+        self.freq = np.zeros((self.n, vocab), np.int32)
+        self.last_access = np.zeros((self.n, vocab), np.int32)
+        self.mark = np.zeros((self.n, vocab), np.int32)
+        self.target = np.ones(self.n, np.int32)   # Emark epoch counter
+        self.it = 0
+        self._rng = np.random.default_rng(seed)
+
+    # -- views used by Alg. 1 ------------------------------------------------
+    @property
+    def latest_in_cache(self) -> np.ndarray:
+        return self.present & self.latest
+
+    def snapshot(self):
+        """Cache snapshots used by the dispatcher (paper §5)."""
+        return self.latest_in_cache.copy(), self.dirty.copy()
+
+    # -- one BSP iteration ---------------------------------------------------
+    def step(self, batches: Sequence[np.ndarray]) -> IterStats:
+        """Run one iteration; ``batches[j]`` = unique ids needed by worker j."""
+        n, V = self.n, self.V
+        self.it += 1
+        need = np.zeros((n, V), bool)
+        for j, ids in enumerate(batches):
+            if len(ids):
+                need[j, np.asarray(ids)] = True
+
+        stats = IterStats(
+            miss_pull=np.zeros(n, np.int64),
+            update_push=np.zeros(n, np.int64),
+            evict_push=np.zeros(n, np.int64),
+            lookups=need.sum(axis=1).astype(np.int64),
+            hits=np.zeros(n, np.int64),
+        )
+
+        # ---- Phase A: update push ------------------------------------------
+        need_any = need.any(axis=0)                      # (V,)
+        need_other = need_any[None, :] & ~(
+            need & (need.sum(axis=0) == 1)[None, :]
+        )  # worker j' sees a needer other than itself
+        if self.sync == "eager":
+            pushers = self.dirty.copy()                  # full-set sync
+        else:
+            pushers = self.dirty & need_other            # (n, V) on-demand
+        stats.update_push += pushers.sum(axis=1)
+        pushed = pushers.any(axis=0)                     # (V,)
+        multi = pushers.sum(axis=0) > 1
+        # after a push the PS holds the newest value: every non-pushing copy
+        # is stale; with multiple simultaneous pushers (merged at PS) all
+        # local copies are stale.
+        self.latest &= ~(pushed[None, :] & ~pushers) & ~multi[None, :]
+        self.dirty &= ~pushers
+
+        # hits are measured after the on-demand sync, as in the paper's
+        # hit-ratio definition ("latest version already cached")
+        stats.hits += (need & self.present & self.latest).sum(axis=1)
+
+        # ---- Phase B: miss pull (+ evictions) ------------------------------
+        for j in range(n):
+            ids = np.where(need[j])[0]
+            if not len(ids):
+                continue
+            have = self.present[j, ids] & self.latest[j, ids]
+            miss_ids = ids[~have]
+            stats.miss_pull[j] += len(miss_ids)
+            # refresh stale-resident entries in place (no eviction needed)
+            resident_stale = miss_ids[self.present[j, miss_ids]]
+            self.latest[j, resident_stale] = True
+            new_ids = miss_ids[~self.present[j, miss_ids]]
+            if len(new_ids):
+                free = self.capacity - int(self.present[j].sum())
+                overflow = len(new_ids) - free
+                if overflow > 0:
+                    victims = self._pick_victims(j, need[j], overflow)
+                    vdirty = victims[self.dirty[j, victims]]
+                    stats.evict_push[j] += len(vdirty)
+                    if len(vdirty):
+                        # evict-push publishes new versions: other copies stale
+                        self.dirty[j, vdirty] = False
+                        others = np.arange(n) != j
+                        self.latest[np.ix_(others, vdirty)] = False
+                    self.present[j, victims] = False
+                    self.latest[j, victims] = False
+                self.present[j, new_ids] = True
+                self.latest[j, new_ids] = True
+
+        # ---- Phase C: train ------------------------------------------------
+        for j in range(n):
+            ids = np.where(need[j])[0]
+            if not len(ids):
+                continue
+            self.dirty[j, ids] = True
+            self.latest[j, ids] = True
+            self.freq[j, ids] += 1
+            self.last_access[j, ids] = self.it
+            self.mark[j, ids] = self.target[j]
+        # copies on workers that did NOT train x become stale
+        trained = need.any(axis=0)
+        self.latest &= ~(trained[None, :] & ~need)
+        return stats
+
+    # -- eviction ------------------------------------------------------------
+    def _pick_victims(self, j: int, pinned: np.ndarray, count: int) -> np.ndarray:
+        cand = np.where(self.present[j] & ~pinned)[0]
+        if len(cand) < count:
+            raise RuntimeError(
+                f"worker {j}: cannot evict {count} of {len(cand)} candidates "
+                "(capacity too small for one batch)"
+            )
+        key = self._evict_key(j, cand)
+        victims = cand[np.argpartition(key, count - 1)[:count]]
+        if self.policy == "emark":
+            # Emark epoch bump: when every cached mark equals target, target+=1
+            if (self.mark[j, self.present[j]] >= self.target[j]).all():
+                self.target[j] += 1
+        return victims
+
+    def _evict_key(self, j: int, cand: np.ndarray) -> np.ndarray:
+        """Smaller key == evicted first."""
+        if self.policy == "lru":
+            return self.last_access[j, cand].astype(np.float64)
+        if self.policy == "lfu":
+            return self.freq[j, cand].astype(np.float64)
+        # Emark §8.1: version (outdated first) > mark epoch > frequency
+        version = self.latest[j, cand].astype(np.float64)     # 0 outdated, 1 latest
+        mark = self.mark[j, cand].astype(np.float64)
+        freq = self.freq[j, cand].astype(np.float64)
+        fmax = float(freq.max()) + 1.0
+        mmax = float(self.target[j]) + 1.0
+        return (version * mmax * fmax * 2.0) + (mark * fmax) + freq
+
+    # -- warm start ----------------------------------------------------------
+    def prefill(self, hot_ids: np.ndarray):
+        """Fill every cache with (up to capacity) given ids, latest & clean."""
+        ids = np.asarray(hot_ids)[: self.capacity]
+        self.present[:, :] = False
+        self.latest[:, :] = False
+        self.dirty[:, :] = False
+        self.present[:, ids] = True
+        self.latest[:, ids] = True

@@ -1,0 +1,131 @@
+"""Alg. 1 — expected embedding-transmission cost matrix.
+
+For input embedding samples ``E`` (one iteration, k = m*n samples) and the
+current cache state, compute ``C[i, j]`` = expected transmission cost of
+training sample ``E_i`` on worker ``w_j``:
+
+  * miss pull   — for every id x in E_i whose *latest* version is not in
+                  w_j's cache: += T_j            (Alg. 1 line 6-7)
+  * update push — for every id x in E_i that some other worker j' trained
+                  last iteration (dirty copy):   += T_{j'}   (line 8-9)
+
+Two implementations:
+  * :func:`cost_matrix_np` — numpy, the paper-faithful simulator path.
+  * :func:`cost_matrix_jnp` — jnp/XLA, used inside the jitted TPU dispatch
+    step (and the pooled-lookup identity used by kernels/emb_lookup).
+
+The jnp path exploits the identity (DESIGN.md §3): define the per-id cost
+row  v[x, j] = (1 - latest_in_cache[j, x]) * T[j] + sum_{j' != j} dirty[j', x] * T[j'];
+then  C[i, :] = sum_{x in E_i} v[x, :]  — i.e. the Alg. 1 matrix is a pooled
+embedding lookup with "embedding dim" n.  That is what lets the same Pallas
+gather-sum kernel serve both the model's sparse features and ESD itself.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["transmission_time", "cost_matrix_np", "per_id_cost_rows", "cost_matrix_jnp"]
+
+PAD_ID = -1  # padding slot inside a sample's id list
+
+
+def transmission_time(d_tran_bytes: float, bandwidth_bytes_per_s: np.ndarray) -> np.ndarray:
+    """T_j = D_tran / B_j (paper Table 1)."""
+    return np.asarray(d_tran_bytes, np.float64) / np.asarray(bandwidth_bytes_per_s, np.float64)
+
+
+def cost_matrix_np(
+    samples: np.ndarray,
+    latest_in_cache: np.ndarray,
+    dirty: np.ndarray,
+    t_tran: np.ndarray,
+) -> np.ndarray:
+    """Paper Alg. 1, vectorized numpy.
+
+    Args:
+      samples: (k, F) int ids, PAD_ID-padded; duplicate ids inside one
+        sample count once per lookup (paper counts per-embedding ops, and a
+        worker pulls a missing embedding once per iteration — we deduplicate
+        per sample, matching the simulator's per-iteration set semantics).
+      latest_in_cache: (n, V) bool — latest version of x is in w_j's cache.
+      dirty: (n, V) bool — w_j holds an unsynced (trained-last-iter) copy.
+      t_tran: (n,) per-embedding transmission time of each worker.
+
+    Returns:
+      (k, n) float64 cost matrix.
+    """
+    samples = np.asarray(samples)
+    k, F = samples.shape
+    n = latest_in_cache.shape[0]
+    valid = samples != PAD_ID
+    ids = np.where(valid, samples, 0)
+
+    # de-duplicate ids within each sample: keep first occurrence only
+    sort_idx = np.argsort(ids, axis=1, kind="stable")
+    sorted_ids = np.take_along_axis(ids, sort_idx, axis=1)
+    first = np.ones_like(sorted_ids, dtype=bool)
+    first[:, 1:] = sorted_ids[:, 1:] != sorted_ids[:, :-1]
+    dedup = np.zeros_like(first)
+    np.put_along_axis(dedup, sort_idx, first, axis=1)
+    valid = valid & dedup
+
+    # miss pull: (k, F, n) -> latest_in_cache[:, ids].T gathers
+    latest_g = latest_in_cache[:, ids]            # (n, k, F)
+    miss = (~latest_g) & valid[None, :, :]        # (n, k, F)
+    miss_cost = miss.sum(axis=2).T * t_tran[None, :]   # (k, n)
+
+    # update push: cost of other dirty holders pushing to the PS.
+    dirty_g = dirty[:, ids]                       # (n, k, F)
+    push_any = (dirty_g * t_tran[:, None, None]).sum(axis=0)   # (k, F) total push cost of all holders
+    push_any = np.where(valid, push_any, 0.0)
+    # subtract the self-term: if w_j itself is the dirty holder, no push.
+    self_push = dirty_g * t_tran[:, None, None]   # (n, k, F)
+    self_push = np.where(valid[None], self_push, 0.0)
+    push_cost = push_any.sum(axis=1)[:, None] - self_push.sum(axis=2).T  # (k, n)
+    return miss_cost + push_cost
+
+
+def per_id_cost_rows(
+    latest_in_cache: jnp.ndarray,
+    dirty: jnp.ndarray,
+    t_tran: jnp.ndarray,
+) -> jnp.ndarray:
+    """The (V, n) table v[x, j] of Alg.-1 cost contributions per id.
+
+    v[x, j] = (1 - latest_in_cache[j, x]) * T_j  +  sum_{j'!=j} dirty[j', x] * T_{j'}
+    """
+    miss = (1.0 - latest_in_cache.astype(jnp.float32)).T * t_tran[None, :]    # (V, n)
+    push_tot = (dirty.astype(jnp.float32) * t_tran[:, None]).sum(axis=0)      # (V,)
+    push = push_tot[:, None] - dirty.astype(jnp.float32).T * t_tran[None, :]  # (V, n)
+    return miss + push
+
+
+def cost_matrix_jnp(
+    samples: jnp.ndarray,
+    latest_in_cache: jnp.ndarray,
+    dirty: jnp.ndarray,
+    t_tran: jnp.ndarray,
+) -> jnp.ndarray:
+    """jnp Alg. 1 via the pooled-lookup identity (jit/shard_map friendly).
+
+    Same contract as :func:`cost_matrix_np` (including per-sample id
+    de-duplication), returning float32.
+    """
+    k, F = samples.shape
+    valid = samples != PAD_ID
+    ids = jnp.where(valid, samples, 0)
+
+    sort_idx = jnp.argsort(ids, axis=1, stable=True)
+    sorted_ids = jnp.take_along_axis(ids, sort_idx, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((k, 1), bool), sorted_ids[:, 1:] != sorted_ids[:, :-1]], axis=1
+    )
+    dedup = jnp.zeros_like(first).at[jnp.arange(k)[:, None], sort_idx].set(first)
+    valid = valid & dedup
+
+    v = per_id_cost_rows(latest_in_cache, dirty, t_tran)      # (V, n)
+    rows = v[ids]                                             # (k, F, n)
+    rows = jnp.where(valid[:, :, None], rows, 0.0)
+    return rows.sum(axis=1)                                   # (k, n)

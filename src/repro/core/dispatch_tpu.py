@@ -1,0 +1,239 @@
+"""ESD as a first-class TPU feature: in-jit dispatch + all_to_all exchange.
+
+Mapping of the paper's edge mechanism onto a TPU mesh (DESIGN.md §2):
+
+  * "edge worker"  = one data-parallel shard (axis ``data``, and ``pod``);
+  * "PS pulls/pushes over Ethernet" = gathers against the model-axis-
+    sharded global embedding table;
+  * heterogeneous 0.5/5 Gbps links = per-worker ``t_tran`` vector (for
+    multi-pod meshes: intra-pod ICI vs inter-pod DCN, ~8x apart);
+  * the dispatch itself = a **static** ``lax.all_to_all``: each shard
+    solves its own m-sample assignment with per-target capacity m/n
+    (paper §4.1 runs the dispatcher locally on each worker), so every
+    shard sends exactly m/n samples to every worker — a fixed-shape
+    collective, no ragged exchange.
+
+Everything here is jit-compatible (runs inside the train step):
+  * Alg. 1 cost matrix  — core.cost.cost_matrix_jnp (or the Pallas kernel);
+  * Heu                 — greedy scan with workload caps;
+  * Opt                 — fixed-phase eps-scaled auction (while_loops);
+  * HybridDis           — regret-sorted split between them (Alg. 2);
+  * cache state machine — vectorized phases A/B/C of core.cache, with
+    optional LRU capacity enforcement (top_k) and full miss-pull /
+    update-push / evict-push accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .auction import _repair, _round_body
+from .cost import cost_matrix_jnp
+
+__all__ = ["EsdState", "esd_init", "esd_dispatch", "esd_state_update",
+           "heu_dispatch_jax", "auction_fixed", "hybrid_dispatch_jax"]
+
+
+# --------------------------------------------------------------------------
+# jittable dispatch decision methods
+# --------------------------------------------------------------------------
+def _regret(C):
+    if C.shape[1] == 1:
+        return jnp.zeros((C.shape[0],), C.dtype)
+    top2 = -jax.lax.top_k(-C, 2)[0]          # two smallest
+    return top2[:, 1] - top2[:, 0]
+
+
+def heu_dispatch_jax(C, cap: int, workload=None, order=None):
+    """Greedy Heu (Alg. 2 L9-18) as a lax.scan.  C: (k, n) -> (k,)."""
+    k, n = C.shape
+    if workload is None:
+        workload = jnp.zeros((n,), jnp.int32)
+    if order is None:
+        order = jnp.argsort(-_regret(C), stable=True)
+    pref = jnp.argsort(C, axis=1, stable=True)           # (k, n)
+
+    def body(wl, i):
+        row = pref[i]
+        free = wl[row] < cap
+        # first preferred worker with spare capacity
+        idx = jnp.argmax(free)
+        j = row[idx]
+        return wl.at[j].add(1), j
+
+    _, js = jax.lax.scan(body, workload, order)
+    return jnp.zeros((k,), jnp.int32).at[order].set(js)
+
+
+@partial(jax.jit, static_argnames=("capacity", "n_phases", "rounds_per_phase"))
+def auction_fixed(C, capacity: int, n_phases: int = 7,
+                  rounds_per_phase: int = 2000):
+    """Fully-traced eps-scaled auction (fixed phase schedule) — the in-step
+    Opt.  Returns (k,) assignment (-1 never remains for feasible inputs
+    given enough rounds; callers fall back greedily on any stragglers)."""
+    k, n = C.shape
+    C = C.astype(jnp.float32)
+    span = jnp.maximum(jnp.max(C) - jnp.min(C), 1e-6)
+    state = (
+        jnp.full((k,), -1, jnp.int32),
+        jnp.zeros((n, capacity), jnp.float32),
+        jnp.full((n, capacity), -1, jnp.int32),
+    )
+
+    def phase(p, state):
+        eps = span / 2.0 / (6.0 ** p.astype(jnp.float32))
+        state = jax.lax.cond(p > 0, lambda s: _repair(C, eps, s),
+                             lambda s: s, state)
+
+        def cond(carry):
+            st, it = carry
+            return (st[0] < 0).any() & (it < rounds_per_phase)
+
+        def body(carry):
+            st, it = carry
+            return _round_body(C, eps, st), it + 1
+
+        state, _ = jax.lax.while_loop(cond, body, (state, 0))
+        return state
+
+    state = jax.lax.fori_loop(0, n_phases, lambda p, s: phase(p, s), state)
+    return state[0]
+
+
+def hybrid_dispatch_jax(C, m: int, alpha: float):
+    """Alg. 2 in-jit: top floor(k*alpha) regret rows -> auction, rest ->
+    greedy, per-worker capacity exactly m/n each side."""
+    k, n = C.shape
+    if n == 1:
+        return jnp.zeros((k,), jnp.int32)
+    cap = m // n if m >= n else 1
+    if alpha <= 0.0:
+        return heu_dispatch_jax(C, cap)
+    opt_cap = int(np.floor(cap * alpha)) if alpha < 1.0 else cap
+    opt_rows = min(int(np.floor(k * alpha)), opt_cap * n)
+    if opt_rows == 0:
+        return heu_dispatch_jax(C, cap)
+    order = jnp.argsort(-_regret(C), stable=True)
+    opt_idx, heu_idx = order[:opt_rows], order[opt_rows:]
+    assign = jnp.full((k,), -1, jnp.int32)
+    a_opt = auction_fixed(C[opt_idx], opt_cap)
+    # stragglers (shouldn't happen with enough rounds): send to min-loaded
+    counts = jnp.zeros((n,), jnp.int32).at[a_opt].add(1, mode="drop")
+    a_opt = jnp.where(a_opt < 0, jnp.argmin(counts).astype(a_opt.dtype), a_opt)
+    assign = assign.at[opt_idx].set(a_opt)
+    if opt_rows < k:
+        workload = jnp.zeros((n,), jnp.int32).at[a_opt].add(1)
+        a_heu = heu_dispatch_jax(C[heu_idx], cap, workload=workload)
+        assign = assign.at[heu_idx].set(a_heu)
+    return assign
+
+
+# --------------------------------------------------------------------------
+# replicated cache state + accounting (vectorized core.cache phases)
+# --------------------------------------------------------------------------
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("latest", "dirty", "last_access", "step"),
+         meta_fields=())
+@dataclasses.dataclass
+class EsdState:
+    latest: jnp.ndarray        # (n, V) bool — latest version resident
+    dirty: jnp.ndarray         # (n, V) bool — unsynced local gradient
+    last_access: jnp.ndarray   # (n, V) int32
+    step: jnp.ndarray          # () int32
+
+
+def esd_init(n_workers: int, vocab: int) -> EsdState:
+    z = jnp.zeros((n_workers, vocab), bool)
+    return EsdState(z, z, jnp.zeros((n_workers, vocab), jnp.int32),
+                    jnp.zeros((), jnp.int32))
+
+
+def esd_state_update(state: EsdState, need: jnp.ndarray,
+                     capacity: Optional[int] = None):
+    """One BSP iteration of the cache protocol on the replicated state.
+
+    need: (n, V) bool — ids each worker trains this iteration (post-
+    dispatch).  Returns (new_state, counts dict with per-worker miss_pull /
+    update_push / evict_push).
+    """
+    latest, dirty = state.latest, state.dirty
+    n, V = need.shape
+    step = state.step + 1
+
+    # Phase A: on-demand update push
+    need_any = need.any(axis=0)
+    sole = need & (need.sum(axis=0) == 1)[None, :]
+    need_other = need_any[None, :] & ~sole
+    pushers = dirty & need_other
+    update_push = pushers.sum(axis=1)
+    pushed = pushers.any(axis=0)
+    multi = pushers.sum(axis=0) > 1
+    latest = latest & ~(pushed[None, :] & ~pushers) & ~multi[None, :]
+    dirty = dirty & ~pushers
+
+    # Phase B: miss pull
+    miss = need & ~latest
+    miss_pull = miss.sum(axis=1)
+    latest = latest | need
+
+    # Phase C: train
+    dirty = dirty | need
+    trained = need.any(axis=0)
+    latest = latest & ~(trained[None, :] & ~need)
+    last_access = jnp.where(need, step, state.last_access)
+
+    # optional LRU capacity: evict all but the `capacity` most recent
+    evict_push = jnp.zeros((n,), jnp.int32)
+    if capacity is not None and capacity < V:
+        # strict LRU cut: tie-break equal access times by id so the keep
+        # set is exactly `capacity` (+ pinned current ids)
+        key = last_access.astype(jnp.int64) * V + jnp.arange(V)[None, :]
+        kth = jax.lax.top_k(key, capacity)[0][:, -1]
+        keep = key >= kth[:, None]
+        keep = keep | need            # pinned
+        evicted = latest & ~keep
+        evict_push = (evicted & dirty).sum(axis=1)
+        dirty = dirty & keep
+        latest = latest & keep
+
+    new = EsdState(latest, dirty, last_access, step)
+    counts = {"miss_pull": miss_pull, "update_push": update_push,
+              "evict_push": evict_push}
+    return new, counts
+
+
+# --------------------------------------------------------------------------
+# the shard_map dispatch + exchange
+# --------------------------------------------------------------------------
+def esd_dispatch(samples, state: EsdState, t_tran, alpha: float,
+                 axis_name: str = "data", use_pallas: bool = False):
+    """Inside shard_map over ``axis_name``: dispatch this shard's samples.
+
+    samples: (m, F) local ids.  Returns (exchanged_samples (m, F), assign).
+    Every shard sends exactly m/n samples to each worker: a static
+    all_to_all.
+    """
+    m, F = samples.shape
+    n = jax.lax.axis_size(axis_name)
+    if use_pallas:
+        from ..kernels.ops import cost_matrix_pallas
+        C = cost_matrix_pallas(samples, state.latest, state.dirty, t_tran)
+    else:
+        C = cost_matrix_jnp(samples, state.latest, state.dirty, t_tran)
+    assign = hybrid_dispatch_jax(C, m, alpha)
+    order = jnp.argsort(assign, stable=True)             # groups of m/n
+    routed = samples[order].reshape(n, m // n, F)
+    exchanged = jax.lax.all_to_all(routed, axis_name, 0, 0, tiled=False)
+    return exchanged.reshape(m, F), assign
+
+
+def need_matrix(local_samples, axis_name: str, vocab: int):
+    """(n, V) bool need matrix from each shard's post-exchange samples."""
+    idx = jnp.where(local_samples >= 0, local_samples, vocab)  # PAD -> OOB
+    mine = jnp.zeros((vocab,), bool).at[idx.reshape(-1)].set(True, mode="drop")
+    return jax.lax.all_gather(mine, axis_name)           # (n, V)

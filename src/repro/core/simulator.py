@@ -1,0 +1,195 @@
+"""Paper-faithful ESD simulator: n edge workers + 1 PS, BSP + on-demand sync.
+
+Drives the cache state machine with a chosen dispatch mechanism over a
+synthetic CTR stream and accounts the paper's metrics:
+
+  * total embedding transmission Cost  (Eq. 3, heterogeneous T_j)
+  * Iterations-per-Second (ItpS): per-iteration wall time modeled as
+      max(compute_time + max_j comm_time_j,  decision_time)
+    because ESD hides the decision for iteration t+1 under iteration t —
+    once the decision takes longer than an iteration, it becomes the
+    bottleneck (paper §6.5 batch-size analysis).
+  * hit ratio, and the miss-pull/update-push/evict-push ingredient split
+    per bandwidth class (Fig. 5).
+
+Decision time: "calibrated" (default) interpolates the paper's Table 2
+GPU-parallel Hungarian latencies — we are simulating their testbed, and
+this container's 1-core solver wall time would misattribute hardware, not
+mechanism (CPU solver times are reported separately in benchmarks/table2).
+"measured" uses the actual dispatch wall clock instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Literal
+
+import numpy as np
+
+from ..data.synthetic import CTRWorkload
+from .baselines import FAECache, HETCache, laia_dispatch, random_dispatch
+from .cache import ClusterCache, IterStats
+from .cost import cost_matrix_np, transmission_time
+from .hybrid import hybrid_dispatch
+
+__all__ = ["SimConfig", "SimResult", "simulate", "DEFAULT_BANDWIDTHS"]
+
+GBPS = 1e9 / 8  # bytes per second per Gbps
+
+
+def DEFAULT_BANDWIDTHS(n: int) -> np.ndarray:
+    """Paper default: half the workers on 5 Gbps, half on 0.5 Gbps."""
+    return np.array([5.0 * GBPS] * (n // 2) + [0.5 * GBPS] * (n - n // 2))
+
+
+@dataclasses.dataclass
+class SimConfig:
+    workload: CTRWorkload
+    n_workers: int = 8
+    batch_per_worker: int = 128          # m
+    cache_ratio: float = 0.08            # r
+    embedding_dim: int = 512             # paper default embedding size
+    bandwidths: np.ndarray | None = None # (n,) bytes/s
+    policy: str = "emark"
+    iters: int = 60
+    warmup: int = 10                     # paper excludes first 10 iters
+    seed: int = 0
+    compute_time_s: float = 0.010        # fwd+bwd+allreduce per iteration
+    mechanism: str = "esd"               # esd | laia | het | fae | random
+    alpha: float = 1.0                   # ESD alpha
+    opt: Literal["hungarian", "auction", "ssp"] = "ssp"
+    hybrid_variant: str = "paper"        # or "opt_first" (beyond-paper)
+    het_staleness: int = 0               # BSP default: staleness tolerance off
+    decision_model: Literal["measured", "calibrated"] = "calibrated"
+
+    @property
+    def d_tran(self) -> float:
+        return self.embedding_dim * 4.0  # fp32 bytes per embedding vector
+
+    @property
+    def k(self) -> int:
+        return self.n_workers * self.batch_per_worker
+
+
+# Paper Table 2: CUDA-parallel Hungarian latency (ms) by batch-per-worker.
+# Used by the "calibrated" decision model: we simulate the paper's testbed
+# (edge workers with GPUs), whose dispatch latency is NOT this container's
+# 1-CPU-core solver wall time (reported separately in benchmarks/table2).
+_TABLE2_PARALLEL_MS = {32: 21, 64: 28, 128: 82, 256: 186, 512: 811, 1024: 1385}
+
+
+def calibrated_decision_time(bpw: int, alpha: float) -> float:
+    """Seconds; Opt part interpolated from paper Table 2 at bpw*alpha."""
+    if alpha <= 0:
+        return 1e-3
+    eff = max(32.0, bpw * alpha)
+    xs = sorted(_TABLE2_PARALLEL_MS)
+    ys = [_TABLE2_PARALLEL_MS[x] for x in xs]
+    ms = float(np.interp(eff, xs, ys))
+    return ms * 1e-3 + 1e-3
+
+
+@dataclasses.dataclass
+class SimResult:
+    cost: float                       # total transmission cost [s], post-warmup
+    itps: float
+    hit_ratio: float
+    decision_time_mean: float
+    ingredient: dict                  # {bandwidth_class: {op: count}}
+    per_iter_cost: np.ndarray
+    per_iter_time: np.ndarray
+
+    def summary(self) -> dict:
+        return {
+            "cost": self.cost,
+            "itps": self.itps,
+            "hit_ratio": self.hit_ratio,
+            "decision_ms": self.decision_time_mean * 1e3,
+        }
+
+
+def _make_cache(cfg: SimConfig, hot_ids: np.ndarray):
+    cap = int(cfg.cache_ratio * cfg.workload.vocab)
+    if cfg.mechanism == "het":
+        if cfg.het_staleness <= 0:
+            # HET under BSP (the paper's setup): version-tracked cache with
+            # eager full-set sync -- no staleness advantage available.
+            return ClusterCache(cfg.n_workers, cfg.workload.vocab, cap,
+                                policy="lru", sync="eager")
+        return HETCache(cfg.n_workers, cfg.workload.vocab, cap,
+                        policy="lru", staleness=cfg.het_staleness)
+    if cfg.mechanism == "fae":
+        return FAECache(cfg.n_workers, cfg.workload.vocab, cap, hot_ids)
+    return ClusterCache(cfg.n_workers, cfg.workload.vocab, cap, policy=cfg.policy)
+
+
+def simulate(cfg: SimConfig) -> SimResult:
+    n, m, k = cfg.n_workers, cfg.batch_per_worker, cfg.k
+    bw = cfg.bandwidths if cfg.bandwidths is not None else DEFAULT_BANDWIDTHS(n)
+    t_tran = transmission_time(cfg.d_tran, bw)
+    rng = np.random.default_rng(cfg.seed)
+
+    # offline popularity profile (for FAE's static hot set)
+    profile = cfg.workload.sample_batch(np.random.default_rng(123), 20_000).ravel()
+    profile = profile[profile >= 0]
+    hot_ids = np.argsort(-np.bincount(profile, minlength=cfg.workload.vocab))
+
+    cache = _make_cache(cfg, hot_ids)
+    stream = cfg.workload.stream(cfg.seed + 1, k)
+
+    per_iter_cost, per_iter_time, dec_times = [], [], []
+    hits = lookups = 0
+    ingredient = {
+        "5Gbps": {"miss_pull": 0, "update_push": 0, "evict_push": 0},
+        "0.5Gbps": {"miss_pull": 0, "update_push": 0, "evict_push": 0},
+    }
+    fast = bw >= np.median(bw)
+
+    for it in range(cfg.iters):
+        samples, _, _ = next(stream)
+
+        t0 = time.perf_counter()
+        if cfg.mechanism == "esd":
+            latest, dirty = cache.snapshot()
+            C = cost_matrix_np(samples, latest, dirty, t_tran)
+            assign = hybrid_dispatch(C, m, cfg.alpha, opt=cfg.opt,
+                                     variant=cfg.hybrid_variant)
+        elif cfg.mechanism == "laia":
+            assign = laia_dispatch(samples, cache.latest_in_cache, m)
+        else:  # het / fae / random all use random dispatch
+            assign = random_dispatch(k, n, rng)
+        dec_t = time.perf_counter() - t0
+        if cfg.decision_model == "calibrated":
+            dec_t = (calibrated_decision_time(m, cfg.alpha)
+                     if cfg.mechanism == "esd" else 1e-3)
+
+        batches = [np.unique(samples[assign == j][samples[assign == j] >= 0])
+                   for j in range(n)]
+        stats: IterStats = cache.step(batches)
+
+        cost = stats.cost(t_tran)
+        comm = stats.per_worker_cost(t_tran)
+        iter_time = max(cfg.compute_time_s + comm.max(), dec_t)
+
+        if it >= cfg.warmup:
+            per_iter_cost.append(cost)
+            per_iter_time.append(iter_time)
+            dec_times.append(dec_t)
+            hits += int(stats.hits.sum())
+            lookups += int(stats.lookups.sum())
+            for cls, mask in (("5Gbps", fast), ("0.5Gbps", ~fast)):
+                ingredient[cls]["miss_pull"] += int(stats.miss_pull[mask].sum())
+                ingredient[cls]["update_push"] += int(stats.update_push[mask].sum())
+                ingredient[cls]["evict_push"] += int(stats.evict_push[mask].sum())
+
+    per_iter_cost = np.asarray(per_iter_cost)
+    per_iter_time = np.asarray(per_iter_time)
+    return SimResult(
+        cost=float(per_iter_cost.sum()),
+        itps=float(len(per_iter_time) / per_iter_time.sum()),
+        hit_ratio=hits / max(lookups, 1),
+        decision_time_mean=float(np.mean(dec_times)),
+        ingredient=ingredient,
+        per_iter_cost=per_iter_cost,
+        per_iter_time=per_iter_time,
+    )

@@ -1,0 +1,85 @@
+"""Exact transportation solver: successive shortest paths on the contracted
+worker graph.
+
+The ESD dispatch instance is an assignment problem with only n (8-16)
+distinct columns, each of capacity m — a transportation problem.  Instead
+of expanding to a k x k Hungarian instance (the paper's approach, O(k^3)),
+we run min-cost-flow successive-shortest-paths where the residual graph is
+contracted to the n worker nodes: a reassignment edge j -> j' costs
+``min_{i in A(j)} (c[i,j'] - c[i,j])``.  Each augmentation is an O(k*n)
+vectorized slack computation plus Bellman-Ford on n nodes (negative edges
+fine, no negative cycles along shortest augmentations), so the whole solve
+is O(k^2 * n) — exact, and orders of magnitude faster than O(k^3) serial
+Hungarian on CPU.
+
+This is the simulator's production ``Opt``; the auction solver remains the
+TPU-kernel-shaped variant (see kernels/auction.py) and ``hungarian`` the
+oracle.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ssp_dispatch"]
+
+INF = np.inf
+
+
+def ssp_dispatch(cost: np.ndarray, capacity: int) -> np.ndarray:
+    """Exact min-cost dispatch of k rows to n workers with per-worker
+    capacity.  Returns (k,) worker indices."""
+    cost = np.asarray(cost, np.float64)
+    k, n = cost.shape
+    if k > capacity * n:
+        raise ValueError("infeasible")
+    assign = np.full(k, -1, np.int64)
+    load = np.zeros(n, np.int64)
+
+    for i in range(k):
+        # direct edges: put sample i on worker j
+        dist = cost[i].copy()                       # (n,)
+        parent = np.full(n, -1, np.int64)           # predecessor worker
+        mover = np.full(n, -1, np.int64)            # sample moved along edge
+
+        # contracted reassignment edges j -> j'
+        if i:
+            a = assign[:i]
+            c_a = cost[:i]                          # (i, n)
+            own = c_a[np.arange(i), a][:, None]     # cost at current worker
+            slack = c_a - own                       # (i, n) move cost
+            # per (j, j'): min slack over samples on j
+            w = np.full((n, n), INF)
+            arg = np.full((n, n), -1, np.int64)
+            for j in range(n):
+                rows = np.where(a == j)[0]
+                if len(rows):
+                    sub = slack[rows]               # (r, n)
+                    idx = sub.argmin(axis=0)
+                    w[j] = sub[idx, np.arange(n)]
+                    arg[j] = rows[idx]
+            np.fill_diagonal(w, INF)
+
+            # Bellman-Ford over n nodes (n is tiny)
+            for _ in range(n):
+                cand = dist[:, None] + w            # (n, n) via j -> j'
+                best_j = cand.argmin(axis=0)
+                best = cand[best_j, np.arange(n)]
+                improve = best < dist - 1e-12
+                if not improve.any():
+                    break
+                dist = np.where(improve, best, dist)
+                parent = np.where(improve, best_j, parent)
+                mover = np.where(improve, arg[best_j, np.arange(n)], mover)
+
+        # cheapest worker with spare capacity
+        open_mask = load < capacity
+        t = int(np.where(open_mask, dist, INF).argmin())
+        # augment: walk predecessor chain back to the direct edge
+        j = t
+        while parent[j] != -1:
+            mv = mover[j]
+            assign[mv] = j
+            j = int(parent[j])
+        assign[i] = j
+        load[t] += 1
+    return assign

@@ -1,0 +1,5 @@
+from .loader import DispatchingLoader, PrefetchLoader
+from .synthetic import WORKLOADS, CTRWorkload, token_stream, zipf_ids
+
+__all__ = ["DispatchingLoader", "PrefetchLoader", "WORKLOADS", "CTRWorkload",
+           "token_stream", "zipf_ids"]

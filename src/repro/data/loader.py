@@ -1,0 +1,83 @@
+"""Prefetching data loader — the substrate ESD builds on (paper §1, §4.1).
+
+The loader prefetches the NEXT iteration's batch on a background thread
+while the current iteration trains, exposing it to the dispatcher so the
+dispatch decision for I_{t+1} is computed during I_t (and its wall time can
+be hidden, paper Fig. 3).  ``DispatchingLoader`` composes a dispatch
+callback into that overlap.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+__all__ = ["PrefetchLoader", "DispatchingLoader"]
+
+_SENTINEL = object()
+
+
+class PrefetchLoader:
+    """Wraps an iterator; keeps ``depth`` batches ready on a worker thread."""
+
+    def __init__(self, it: Iterator[Any], depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._err: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        except BaseException as e:  # pragma: no cover
+            self._err = e
+        finally:
+            self._q.put(_SENTINEL)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if getattr(self, "_done", False):
+            raise StopIteration
+        item = self._q.get()
+        if item is _SENTINEL:
+            self._done = True          # re-raisable: queue is empty now
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+class DispatchingLoader:
+    """Prefetch + one-step lookahead dispatch.
+
+    ``dispatch_fn(next_batch) -> dispatched_batch`` runs while the caller
+    is (conceptually) still training on the current batch — the paper's
+    decision-hiding pipeline.  Yields already-dispatched batches.
+    """
+
+    def __init__(self, it: Iterator[Any], dispatch_fn: Callable[[Any], Any],
+                 depth: int = 2):
+        self._inner = PrefetchLoader(it, depth)
+        self._fn = dispatch_fn
+        self._pending = None
+        self._primed = False
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if not self._primed:
+            self._pending = self._fn(next(self._inner))
+            self._primed = True
+        out = self._pending
+        if out is None:
+            raise StopIteration
+        try:
+            self._pending = self._fn(next(self._inner))
+        except StopIteration:
+            self._pending = None
+        return out

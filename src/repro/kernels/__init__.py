@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jit wrappers.
+
+  emb_lookup — pooled embedding gather-sum (scalar-prefetch BlockSpec
+               gather); also computes the Alg.-1 cost matrix.
+  auction    — auction bid phase (the TPU analogue of the paper's
+               CUDA-parallel Hungarian; DESIGN.md §2).
+  ops        — public jit'd wrappers; ref — pure-jnp oracles.
+"""
+from . import auction, emb_lookup, flash_attn, ops, ref
+from .flash_attn import flash_attention
+from .ops import auction_solve_pallas, cost_matrix_pallas
+
+__all__ = ["auction", "emb_lookup", "flash_attn", "ops", "ref",
+           "auction_solve_pallas", "cost_matrix_pallas", "flash_attention"]

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: auction bid phase (the paper's CUDA-Hungarian analogue).
+
+The paper parallelizes the Hungarian algorithm's row reductions on a GPU
+(Table 2).  Our TPU formulation is the auction algorithm (DESIGN.md §2);
+its per-round hot loop — every unassigned bidder computing its best and
+second-best value over workers and a bid — is exactly a row-tiled VPU
+reduction, implemented here with an explicit BlockSpec over bidder tiles.
+
+Grid = (k / BLOCK_K,).  Each step loads a (BLOCK_K, n) cost tile into VMEM
+together with the (1, n) price row, computes value = -cost - price, the
+top-2 reduction along n, and writes (best_j, bid) for the tile.  Conflict
+resolution (one winner per worker slot) stays in jnp on the host-side
+round loop (core/auction.py) — it is O(n) work.
+
+Worker count n is padded to the 128-lane boundary with +inf cost columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+BLOCK_K = 256
+
+
+def _bid_kernel(cost_ref, price_ref, unassigned_ref, eps_ref, bj_ref, bid_ref):
+    cost = cost_ref[...].astype(jnp.float32)              # (bk, n_pad)
+    price = price_ref[...].astype(jnp.float32)            # (1, n_pad)
+    values = -cost - price                                # (bk, n_pad)
+    bk, npad = values.shape
+
+    w1 = jnp.max(values, axis=1)                          # (bk,)
+    best_j = jnp.argmax(values, axis=1)                   # (bk,)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bk, npad), 1)
+    masked = jnp.where(cols == best_j[:, None], NEG, values)
+    w2 = jnp.max(masked, axis=1)
+
+    minp = jnp.min(price, axis=1)                         # scalar-ish (1,)
+    # price of the chosen worker's cheapest slot = price row gathered at j*
+    pj = jnp.sum(jnp.where(cols == best_j[:, None], price, 0.0), axis=1)
+    bid = pj + (w1 - w2) + eps_ref[0]
+    un = unassigned_ref[...].astype(jnp.float32)          # (bk,)
+    bj_ref[...] = best_j.astype(jnp.int32)
+    bid_ref[...] = jnp.where(un > 0, bid, NEG).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def auction_bids(
+    cost: jnp.ndarray,          # (k, n)
+    min_price: jnp.ndarray,     # (n,) current cheapest slot price per worker
+    unassigned: jnp.ndarray,    # (k,) bool
+    eps: jnp.ndarray,           # scalar
+    *,
+    block_k: int = BLOCK_K,
+    interpret: bool = True,
+):
+    """Returns (best_j (k,) int32, bid (k,) f32; NEG where assigned)."""
+    k, n = cost.shape
+    if n == 1:  # degenerate single worker: bid = cheapest price + eps
+        bid = jnp.where(unassigned, min_price[0] + eps, NEG)
+        return jnp.zeros((k,), jnp.int32), bid.astype(jnp.float32)
+    pad_k = (-k) % block_k
+    pad_n = (-n) % 128   # lane alignment; pad cols = +inf
+    costp = jnp.pad(cost.astype(jnp.float32), ((0, pad_k), (0, pad_n)),
+                    constant_values=1e30)
+    pricep = jnp.pad(min_price.astype(jnp.float32), (0, pad_n),
+                     constant_values=1e30)[None, :]
+    unp = jnp.pad(unassigned.astype(jnp.float32), (0, pad_k))
+    kp, npad = costp.shape
+
+    bj, bid = pl.pallas_call(
+        _bid_kernel,
+        grid=(kp // block_k,),
+        in_specs=[
+            pl.BlockSpec((block_k, npad), lambda i: (i, 0)),
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),   # eps, tiny
+        ],
+        out_specs=[
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp,), jnp.int32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(costp, pricep, unp, jnp.reshape(eps, (1,)).astype(jnp.float32))
+    return bj[:k], bid[:k]

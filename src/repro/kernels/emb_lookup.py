@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: pooled embedding gather-sum.
+
+The DLRM hot-spot — for each sample (bag) of F ids, fetch F rows of the
+embedding table and sum them — AND, via the Alg.-1 identity (core/cost.py),
+the ESD expected-cost matrix itself: with ``table = per_id_cost_rows()``
+(V, n) and bags = samples, the pooled sum IS the cost matrix C.
+
+TPU adaptation of the CUDA gather: instead of thread-level gather, the row
+index streams in through scalar prefetch (``PrefetchScalarGridSpec``) and
+the BlockSpec ``index_map`` selects which table row block is DMA'd
+HBM->VMEM for each grid step — the idiomatic TPU embedding-gather pattern.
+Grid = (bags, E-blocks, ids-per-bag) with the id dimension innermost so the
+output block accumulates in VMEM across the F steps (zeroed at f == 0).
+
+Weights multiply each row (0.0 for PAD ids — the wrapper clamps PAD to row
+0 and zeroes its weight).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_E = 128
+
+
+def _kernel(ids_ref, w_ref, table_ref, out_ref):
+    b = pl.program_id(0)
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[b, f].astype(out_ref.dtype)
+    out_ref[...] += table_ref[...].astype(out_ref.dtype) * w
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def pooled_lookup(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    block_e: int = DEFAULT_BLOCK_E,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """sum_f table[ids[b, f]] * weights[b, f]  ->  (B, E).
+
+    ids: (B, F) int32, PAD = -1 (weight forced to 0).
+    """
+    B, F = ids.shape
+    V, E = table.shape
+    if weights is None:
+        weights = jnp.ones((B, F), jnp.float32)
+    valid = ids >= 0
+    ids_c = jnp.where(valid, ids, 0).astype(jnp.int32)
+    w = jnp.where(valid, weights, 0.0).astype(jnp.float32)
+
+    pad_e = (-E) % block_e
+    tbl = jnp.pad(table, ((0, 0), (0, pad_e))) if pad_e else table
+    Ep = E + pad_e
+    n_e = Ep // block_e
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, n_e, F),
+            in_specs=[
+                pl.BlockSpec((1, block_e),
+                             lambda b, e, f, ids_, w_: (ids_[b, f], e)),
+            ],
+            out_specs=pl.BlockSpec((1, block_e),
+                                   lambda b, e, f, ids_, w_: (b, e)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Ep), jnp.float32),
+        interpret=interpret,
+    )(ids_c, w, tbl)
+    return out[:, :E]

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: blockwise flash attention (GQA layout).
+
+The framework's pure-jnp flash attention (models/layers.attention_flash)
+is the lowering used by the dry-run; this kernel is its TPU-native hot
+path: grid over (batch*kv-head, q-blocks), inner fori over kv blocks with
+the online-softmax (m, l, acc) carry held in VMEM.  Causal block skipping
+falls out naturally: the kv loop stops at the q block's diagonal — the
+optimization the jnp scan cannot express with static shapes (§Perf note in
+EXPERIMENTS.md).
+
+Validated against kernels/ref.flash_attention_ref in interpret mode
+(tests/test_kernels_flash.py) over shape sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+DEF_BQ = 128
+DEF_BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, n_kv_blocks, causal, scale):
+    qi = pl.program_id(1)
+    # q_ref block: (1, bq, G, hd); k_ref/v_ref: (1, Sk, hd)
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, G, hd)
+    G, hd = q.shape[1], q.shape[2]
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], j * bk, bk, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], j * bk, bk, axis=0)
+        s = jnp.einsum("qgh,kh->gqk", q, k.astype(jnp.float32))   # (G,bq,bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where((kpos <= qpos)[None], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("gqk,kh->gqh", p, v.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return m_new, l_new, acc_new
+
+    # causal: kv blocks beyond this q block's diagonal contribute nothing
+    if causal:
+        hi = jnp.minimum((qi * bq + bq + bk - 1) // bk, n_kv_blocks)
+    else:
+        hi = n_kv_blocks
+    m0 = jnp.full((G, bq), NEG, jnp.float32)
+    l0 = jnp.zeros((G, bq), jnp.float32)
+    a0 = jnp.zeros((G, bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (G, bq, hd)
+    o_ref[0] = out.transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    bq: int = DEF_BQ, bk: int = DEF_BK,
+                    interpret: bool = True):
+    """q: (B, Sq, KV, G, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, KV, G, hd).
+
+    Grid: (B*KV, Sq/bq); each step streams kv blocks for one (batch,
+    kv-head) pair.  Sq % bq == 0 and Sk % bk == 0 required (pad upstream).
+    """
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    scale = 1.0 / np.sqrt(hd)
+
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(B * KV, Sq, G, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_kv_blocks=Sk // bk,
+                          causal=causal, scale=scale),
+        grid=(B * KV, Sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, G, hd), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, Sk, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Sk, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, G, hd), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, Sq, G, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, KV, Sq, G, hd).transpose(0, 2, 1, 3, 4)

@@ -1,0 +1,118 @@
+"""jit'd wrappers: the public ops backed by the Pallas kernels.
+
+  cost_matrix_pallas  — Alg. 1 expected-cost matrix as ONE pooled-lookup
+                        kernel call (the identity from core/cost.py).
+  auction_solve_pallas — eps-scaled auction whose bid phase runs in the
+                        Pallas kernel; conflict resolution in jnp.
+
+Both default to interpret mode (this container is CPU); on TPU pass
+``interpret=False``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cost import PAD_ID, per_id_cost_rows
+from .auction import NEG, auction_bids
+from .emb_lookup import pooled_lookup
+
+
+def cost_matrix_pallas(samples, latest_in_cache, dirty, t_tran, *,
+                       interpret: bool = True):
+    """Alg. 1 as a pooled lookup of the (V, n) per-id cost table.
+
+    Matches core.cost.cost_matrix_jnp (incl. per-sample id dedup).
+    """
+    k, F = samples.shape
+    valid = samples != PAD_ID
+    ids = jnp.where(valid, samples, 0)
+    sort_idx = jnp.argsort(ids, axis=1, stable=True)
+    sorted_ids = jnp.take_along_axis(ids, sort_idx, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((k, 1), bool), sorted_ids[:, 1:] != sorted_ids[:, :-1]], axis=1
+    )
+    dedup = jnp.zeros_like(first).at[jnp.arange(k)[:, None], sort_idx].set(first)
+    w = (valid & dedup).astype(jnp.float32)
+    table = per_id_cost_rows(latest_in_cache, dirty, t_tran)     # (V, n)
+    return pooled_lookup(table, ids.astype(jnp.int32), w, interpret=interpret)
+
+
+def _resolve(cost, eps, state, best_j, bid):
+    """One conflict-resolution step given kernel bids (jnp, O(n) work).
+
+    Same batched slot-matching as core.auction._round_body.
+    """
+    assign, slot_prices, slot_owner = state
+    k, n = cost.shape
+    m = slot_prices.shape[1]
+    L = min(k, m)
+
+    bid_mat = jnp.where(best_j[None, :] == jnp.arange(n)[:, None], bid[None, :], NEG)
+    bid_order = jnp.argsort(-bid_mat, axis=1)[:, :L]
+    top_bids = jnp.take_along_axis(bid_mat, bid_order, axis=1)
+    price_order = jnp.argsort(slot_prices, axis=1)[:, :L]
+    low_prices = jnp.take_along_axis(slot_prices, price_order, axis=1)
+    match = (top_bids > low_prices) & (top_bids > NEG / 2)
+    prev_owner = jnp.take_along_axis(slot_owner, price_order, axis=1)
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], (n, L))
+    disp = jnp.where(match & (prev_owner >= 0), prev_owner, k)
+    assign = assign.at[disp.ravel()].set(-1, mode="drop")
+    winners = jnp.where(match, bid_order, k)
+    assign = assign.at[winners.ravel()].set(rows.ravel(), mode="drop")
+    slot_prices = slot_prices.at[rows, price_order].set(
+        jnp.where(match, top_bids, low_prices))
+    slot_owner = slot_owner.at[rows, price_order].set(
+        jnp.where(match, bid_order, prev_owner))
+    return assign, slot_prices, slot_owner
+
+
+@partial(jax.jit, static_argnames=("capacity", "max_rounds", "interpret"))
+def _phase(cost, eps, state, capacity: int, max_rounds: int, interpret: bool):
+    def cond(carry):
+        st, it = carry
+        return (st[0] < 0).any() & (it < max_rounds)
+
+    def body(carry):
+        st, it = carry
+        assign, slot_prices, _ = st
+        min_price = jnp.min(slot_prices, axis=1)
+        bj, bid = auction_bids(cost, min_price, assign < 0, eps,
+                               interpret=interpret)
+        return _resolve(cost, eps, st, bj, bid), it + 1
+
+    (state, rounds) = jax.lax.while_loop(cond, body, (state, 0))
+    return state, rounds
+
+
+def auction_solve_pallas(cost, capacity: int, eps: float = 1e-3,
+                         max_rounds: int = 500_000, scaling: float = 6.0,
+                         interpret: bool = True):
+    """Same contract as core.auction.auction_solve, bid phase on Pallas."""
+    from ..core.auction import _repair
+
+    cost = jnp.asarray(cost, jnp.float32)
+    k, n = cost.shape
+    span = float(jnp.max(cost) - jnp.min(cost))
+    phases = []
+    e = max(span / 2.0, eps)
+    while e > eps:
+        phases.append(e)
+        e /= scaling
+    phases.append(eps)
+    state = (
+        jnp.full((k,), -1, jnp.int32),
+        jnp.zeros((n, capacity), jnp.float32),
+        jnp.full((n, capacity), -1, jnp.int32),
+    )
+    total = 0
+    for i, e in enumerate(phases):
+        e = jnp.asarray(e, jnp.float32)
+        if i:
+            state = _repair(cost, e, state)
+        state, rounds = _phase(cost, e, state, capacity, max_rounds, interpret)
+        total += int(rounds)
+    return state[0], total

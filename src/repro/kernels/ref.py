@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pooled_lookup_ref(table, ids, weights=None):
+    """sum_f table[ids[b,f]] * w[b,f]; PAD = -1."""
+    B, F = ids.shape
+    if weights is None:
+        weights = jnp.ones((B, F), jnp.float32)
+    valid = ids >= 0
+    ids_c = jnp.where(valid, ids, 0)
+    w = jnp.where(valid, weights, 0.0)
+    rows = table[ids_c].astype(jnp.float32)          # (B, F, E)
+    return (rows * w[..., None]).sum(axis=1)
+
+
+def auction_bids_ref(cost, min_price, unassigned, eps):
+    """Row-parallel bid phase of the auction round (core/auction.py).
+
+    cost: (k, n); min_price: (n,); unassigned: (k,) bool.
+    Returns best_j (k,) int32, bid (k,) f32 (NEG for assigned rows).
+    """
+    NEG = -1e30
+    k, n = cost.shape
+    values = -cost - min_price[None, :]
+    best_j = jnp.argmax(values, axis=1)
+    w1 = jnp.max(values, axis=1)
+    v2 = values.at[jnp.arange(k), best_j].set(NEG)
+    w2 = jnp.max(v2, axis=1)
+    w2 = jnp.where(n == 1, w1, w2)
+    bid = min_price[best_j] + (w1 - w2) + eps
+    bid = jnp.where(unassigned, bid, NEG)
+    return best_j.astype(jnp.int32), bid.astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    """Naive softmax attention oracle.  q: (B,Sq,KV,G,hd), k/v: (B,Sk,KV,hd)."""
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    logits = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= qp - kp < window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))

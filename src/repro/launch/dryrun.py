@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+)
+# ^ MUST run before any jax import/init: jax locks device count on first use.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh and extract roofline inputs.
+(No ``from __future__ import annotations`` here: the XLA_FLAGS lines above
+must be the first statements in the module.)
+
+For each combo this produces a JSON record with:
+  * memory_analysis (per-device argument/output/temp bytes, if the backend
+    reports it) + analytic per-device state bytes,
+  * cost_analysis FLOPs / bytes accessed,
+  * per-collective-op wire bytes parsed from the post-SPMD optimized HLO,
+  * lowering/compile wall times.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Scan-trip-count correction: XLA's cost_analysis counts a `while` body ONCE,
+but our layer stacks run under `lax.scan`.  We therefore also lower two
+cheap probes (1 layer-group and 2 layer-groups); the per-group delta of
+every cost metric extrapolates linearly to the full depth (exact for
+homogeneous stacks — which scan requires anyway).  The FULL config is still
+lowered+compiled on the production mesh (that's the sharding/memory
+validation); only flops/bytes/collective totals come from the probes.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, CONFIGS, INPUT_SHAPES
+from ..dist.sharding import batch_specs, cache_specs, data_axes, param_specs
+from .mesh import make_production_mesh
+from .steps import input_specs, make_prefill_step, make_serve_step, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# hillclimb hook: transform optimizer-state PartitionSpecs before lowering
+# (benchmarks/hillclimb.py sets this to dist.sharding.zero1_specs)
+OPT_SPEC_TRANSFORM = None
+
+
+def should_skip(arch: str, shape_name: str) -> str | None:
+    """Documented skips (DESIGN.md §Input-shape skips)."""
+    cfg = CONFIGS[arch]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md)")
+    return None
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op-type wire-byte estimate from post-SPMD optimized HLO.
+
+    Result shapes in the optimized module are per-device shard shapes; we
+    take each collective's result bytes, x2 for all-reduce (reduce +
+    broadcast phases of a ring).  ``-start`` async forms are counted once
+    (the matching ``-done`` carries no new transfer).
+    """
+    out = {op: {"count": 0, "bytes": 0.0} for op in _COLLECTIVES}
+    op_re = re.compile(
+        r"=\s*(?P<types>.*?)\s"
+        r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?P<start>-start)?\("
+    )
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(m.group("types")):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        mult = 2.0 if op == "all-reduce" else 1.0
+        out[op]["count"] += 1
+        out[op]["bytes"] += nbytes * mult
+    out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+def _analytic_device_bytes(tree_shapes, specs, mesh) -> float:
+    """Exact per-device bytes for a sharded ShapeDtypeStruct tree."""
+    axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0.0
+    for leaf, spec in zip(jax.tree.leaves(tree_shapes),
+                          jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for nm in names:
+                shards *= axis[nm]
+        total += np.prod(leaf.shape) * leaf.dtype.itemsize / shards if leaf.shape else leaf.dtype.itemsize
+    return float(total)
+
+
+def _measure(cfg, shape_name: str, multi_pod: bool, remat: bool,
+             step_override=None) -> dict:
+    """Lower + compile one config and extract all analyses."""
+    shape = INPUT_SHAPES[shape_name]
+    rec = {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from ..dist import ctx
+    rec["attn_mode"] = ctx.set_attention_specs(cfg, mesh)
+    spec = input_specs(cfg, shape_name)
+    pspecs = param_specs(spec["params"], cfg)
+    sh = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        step = step_override or make_train_step(cfg, spec["optimizer"], remat=remat)
+        ospecs = param_specs(spec["opt_state"], cfg)
+        if OPT_SPEC_TRANSFORM is not None:   # hillclimb hook (e.g. ZeRO-1)
+            ospecs = OPT_SPEC_TRANSFORM(ospecs, spec["opt_state"], mesh)
+        bspecs = batch_specs(cfg, shape, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh(pspecs), sh(ospecs), sh(bspecs)),
+            out_shardings=(sh(pspecs), sh(ospecs), NamedSharding(mesh, P())),
+        )
+        args = (spec["params"], spec["opt_state"], spec["batch"])
+        state_bytes = (
+            _analytic_device_bytes(spec["params"], pspecs, mesh)
+            + _analytic_device_bytes(spec["opt_state"], ospecs, mesh)
+        )
+    elif shape.kind == "prefill":
+        step = step_override or make_prefill_step(cfg, remat=remat)
+        bspecs = batch_specs(cfg, shape, mesh)
+        dp = data_axes(mesh)
+        vocab_ax = "model" if cfg.vocab % 16 == 0 else None
+        logits_spec = P(dp if shape.global_batch >= 32 else None, None, vocab_ax)
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh(pspecs), sh(bspecs)),
+            out_shardings=NamedSharding(mesh, logits_spec),
+        )
+        args = (spec["params"], spec["batch"])
+        state_bytes = _analytic_device_bytes(spec["params"], pspecs, mesh)
+    else:
+        step = step_override or make_serve_step(cfg)
+        cspecs = cache_specs(cfg, spec["cache"], mesh, shape.global_batch)
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh(pspecs), sh(cspecs),
+                          NamedSharding(mesh, P()), NamedSharding(mesh, P())),
+            out_shardings=(NamedSharding(
+                mesh, P(None, None, "model" if cfg.vocab % 16 == 0 else None)),
+                sh(cspecs)),
+        )
+        args = (spec["params"], spec["cache"], spec["token"], spec["pos"])
+        state_bytes = (
+            _analytic_device_bytes(spec["params"], pspecs, mesh)
+            + _analytic_device_bytes(spec["cache"], cspecs, mesh)
+        )
+
+    try:
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0
+    finally:
+        ctx.clear()
+
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["state_bytes_per_device"] = state_bytes
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes")
+            if hasattr(ma, k)
+        } if ma is not None else None
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis"] = f"unavailable: {e}"
+
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if k in ("flops", "bytes accessed", "transcendentals",
+                     "bytes accessed output", "optimal_seconds")
+        } if ca else None
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = f"unavailable: {e}"
+
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["hlo_bytes"] = len(hlo)
+    return rec
+
+
+def _probe_cfg(cfg, groups: int):
+    P = len(cfg.layer_pattern)
+    repl = {"n_layers": P * groups}
+    if cfg.encoder_layers:
+        repl["encoder_layers"] = groups
+    return dataclasses.replace(cfg, **repl)
+
+
+def _group_multiplier(cfg) -> float:
+    P = len(cfg.layer_pattern)
+    return cfg.n_layers // P + (cfg.n_layers % P) / P
+
+
+_EXTRAP_COST_KEYS = ("flops", "bytes accessed", "transcendentals")
+
+
+def _extrapolate(m1: dict, m2: dict, mult: float) -> dict:
+    """extrap = m1 + (m2 - m1) * (mult - 1), applied to cost metrics."""
+    out = {}
+    c1, c2 = m1.get("cost_analysis"), m2.get("cost_analysis")
+    if isinstance(c1, dict) and isinstance(c2, dict):
+        out["cost_analysis"] = {
+            k: c1.get(k, 0.0) + (c2.get(k, 0.0) - c1.get(k, 0.0)) * (mult - 1)
+            for k in _EXTRAP_COST_KEYS if k in c1
+        }
+    col = {}
+    for op in _COLLECTIVES:
+        b1, b2 = m1["collectives"][op]["bytes"], m2["collectives"][op]["bytes"]
+        n1, n2 = m1["collectives"][op]["count"], m2["collectives"][op]["count"]
+        col[op] = {
+            "bytes": b1 + (b2 - b1) * (mult - 1),
+            "count": n1 + (n2 - n1) * (mult - 1),
+        }
+    col["total_bytes"] = sum(v["bytes"] for v in col.values() if isinstance(v, dict))
+    out["collectives"] = col
+    return out
+
+
+def run_dryrun(arch: str, shape_name: str, multi_pod: bool = False,
+               remat: bool = True, verbose: bool = True,
+               step_override=None, probes: bool = True) -> dict:
+    cfg = CONFIGS[arch]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "family": cfg.family, "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    skip = should_skip(arch, shape_name)
+    if skip:
+        rec["skipped"] = skip
+        return rec
+
+    # full config: the sharding/memory/compile validation
+    full = _measure(cfg, shape_name, multi_pod, remat, step_override)
+    rec.update(full)
+
+    if probes:
+        # scan-trip-count-corrected cost metrics via UNROLLED 1g/2g probes
+        from ..models import scan_config
+        scan_config.UNROLL = True
+        try:
+            m1 = _measure(_probe_cfg(cfg, 1), shape_name, multi_pod, remat, step_override)
+            m2 = _measure(_probe_cfg(cfg, 2), shape_name, multi_pod, remat, step_override)
+        finally:
+            scan_config.UNROLL = False
+        ext = _extrapolate(m1, m2, _group_multiplier(cfg))
+        rec["cost_analysis_extrapolated"] = ext.get("cost_analysis")
+        rec["collectives_extrapolated"] = ext["collectives"]
+        rec["probe_compile_s"] = (m1.get("compile_s", 0), m2.get("compile_s", 0))
+
+    if verbose:
+        ca = rec.get("cost_analysis_extrapolated") or rec.get("cost_analysis") or {}
+        fl = ca.get("flops", 0) if isinstance(ca, dict) else 0
+        coll = rec.get("collectives_extrapolated", rec.get("collectives", {}))
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"compile={rec.get('compile_s')}s flops/dev={fl:.3g} "
+              f"coll={coll.get('total_bytes', 0):.3g}B "
+              f"state/dev={rec.get('state_bytes_per_device', 0)/2**30:.2f}GiB",
+              flush=True)
+    return rec
+
+
+def save(rec: dict, out_dir: Path, tag: str = ""):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['mesh']}_{rec['arch']}_{rec['shape']}{tag}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the 1g/2g cost probes (multi-pod pass: the "
+                         "roofline table is single-pod; this pass proves "
+                         "lowering/sharding only)")
+    ap.add_argument("--out", type=Path, default=RESULTS_DIR)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    combos = (
+        [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+        if args.all else [(args.arch, args.shape)]
+    )
+    ok = True
+    for arch, shape in combos:
+        out_file = args.out / f"{'2x16x16' if args.multi_pod else '16x16'}_{arch}_{shape}{args.tag}.json"
+        if args.all and out_file.exists():
+            print(f"[dryrun] skip existing {out_file.name}", flush=True)
+            continue
+        try:
+            rec = run_dryrun(arch, shape, multi_pod=args.multi_pod,
+                             remat=not args.no_remat,
+                             probes=not args.no_probes)
+        except Exception as e:
+            print(f"[dryrun] FAIL {arch} x {shape}: {type(e).__name__}: {e}",
+                  flush=True)
+            ok = False
+            continue
+        save(rec, args.out, args.tag)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS for 512 host devices *before* any jax
+init; tests and benches see the real single CPU device).
+
+TPU v5e constants used by the roofline (benchmarks/roofline.py):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI; the
+  inter-pod DCN tier is modeled at ~1/8 ICI — the 2-tier heterogeneous
+  network that ESD's bandwidth-weighted cost matrix exploits (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (intra-pod)
+DCN_BW = 6.25e9              # bytes/s per link (inter-pod tier)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,0 +1,134 @@
+"""Step builders: jitted train_step / serve_step factories + ShapeDtypeStruct
+input specs for the dry-run (no allocation, weak-type-correct)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from ..models import api
+from ..optim import Optimizer, get_optimizer
+
+
+# Hillclimb hook: when set (e.g. jnp.bfloat16), gradients are cast before
+# the optimizer so the data-parallel sync happens in half precision
+# (standard mixed-precision practice — §Perf hillclimb 3).
+GRAD_DTYPE = None
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, remat: bool = True,
+                    grad_dtype=None):
+    def train_step(params, opt_state, batch):
+        nonlocal grad_dtype
+        grad_dtype = grad_dtype or GRAD_DTYPE
+        loss, grads = jax.value_and_grad(api.train_loss)(
+            params, cfg, batch, remat=remat
+        )
+        if grad_dtype is not None:
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return api.decode_step(params, cfg, token, cache, pos)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# abstract input specs (dry-run)
+# --------------------------------------------------------------------------
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def param_shapes(cfg: ModelConfig):
+    return _sds(jax.eval_shape(partial(api.init_model, cfg=cfg),
+                               jax.random.key(0)))
+
+
+def opt_state_shapes(cfg: ModelConfig, optimizer: Optimizer):
+    p = param_shapes(cfg)
+    return _sds(jax.eval_shape(optimizer.init, p))
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for every model input (train batch)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        dec = min(S, 448)
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, dec), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, dec), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S - cfg.n_patches), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S - cfg.n_patches), jnp.int32),
+            "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model),
+                                            jnp.bfloat16),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    return _sds(jax.eval_shape(
+        partial(api.init_decode_cache, cfg, shape.global_batch, shape.seq_len)
+    ))
+
+
+def decode_input_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    return (
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),     # token
+        jax.ShapeDtypeStruct((), jnp.int32),         # pos
+    )
+
+
+def input_specs(arch_cfg: ModelConfig, shape_name: str, optimizer_name: str = "adam"):
+    """Everything the dry-run needs to lower one (arch, shape) combo."""
+    shape = INPUT_SHAPES[shape_name]
+    opt = get_optimizer(optimizer_name, 1e-3)
+    out: dict[str, Any] = {"shape": shape, "optimizer": opt,
+                           "params": param_shapes(arch_cfg)}
+    if shape.kind == "train":
+        out["opt_state"] = opt_state_shapes(arch_cfg, opt)
+        out["batch"] = batch_shapes(arch_cfg, shape)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_shapes(arch_cfg, shape)
+    else:  # decode
+        out["cache"] = cache_shapes(arch_cfg, shape)
+        out["token"], out["pos"] = decode_input_shapes(arch_cfg, shape)
+    return out
+
+
+def make_prefill_step(cfg: ModelConfig, remat: bool = True):
+    """Forward-only logits for the prefill shape (inference)."""
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            from ..models import whisper
+            memory = whisper.encode(params, cfg, batch["frames"], remat=remat)
+            return whisper.decode_train(params, cfg, batch["tokens"], memory,
+                                        remat=remat)
+        from ..models import backbone
+        logits, _ = backbone.forward(
+            params, cfg, batch["tokens"],
+            prefix_embeds=batch.get("patches"), remat=remat,
+        )
+        return logits
+
+    return prefill_step

@@ -1,0 +1,16 @@
+"""Model zoo: generic decoder backbone (dense/MoE/SSM/hybrid/VLM), whisper
+encoder-decoder, and the paper's DLRM models (WDL/DFM/DCN)."""
+from . import api, backbone, dlrm, layers, ssm, whisper
+from .api import (
+    decode_step,
+    init_decode_cache,
+    init_model,
+    make_train_batch,
+    train_loss,
+)
+
+__all__ = [
+    "api", "backbone", "dlrm", "layers", "ssm", "whisper",
+    "decode_step", "init_decode_cache", "init_model", "make_train_batch",
+    "train_loss",
+]

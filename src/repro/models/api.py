@@ -1,0 +1,75 @@
+"""Unified model API over all families — what the launcher/dry-run drives.
+
+  init_model(key, cfg)                       -> params
+  train_loss(params, cfg, batch)             -> scalar loss
+  init_decode_cache(cfg, batch, seq_len)     -> cache
+  decode_step(params, cfg, token, cache, pos)-> (logits, cache)
+  make_batch_specs(cfg, shape)               -> ShapeDtypeStruct batch (launch/)
+
+Batch layouts by family:
+  lm families (dense/moe/ssm/hybrid): {tokens (B,S), labels (B,S)}
+  vlm:   {tokens (B,S-P), labels (B,S-P), patches (B,P,D)}  (stub frontend)
+  audio: {frames (B,S,D), tokens (B,448), labels (B,448)}   (stub frontend)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import backbone, whisper
+
+LM_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+def init_model(key, cfg: ModelConfig):
+    if cfg.family == "audio":
+        return whisper.init_params(key, cfg)
+    return backbone.init_params(key, cfg)
+
+
+def train_loss(params, cfg: ModelConfig, batch, remat: bool = True):
+    if cfg.family == "audio":
+        return whisper.loss(params, cfg, batch["frames"], batch["tokens"],
+                            batch["labels"], remat=remat)
+    if cfg.family == "vlm":
+        return backbone.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                                prefix_embeds=batch["patches"], remat=remat)
+    return backbone.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                            remat=remat)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    if cfg.family == "audio":
+        return whisper.init_cache(cfg, batch, enc_len=seq_len)
+    return backbone.init_cache(cfg, batch, seq_len)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    if cfg.family == "audio":
+        return whisper.decode_step(params, cfg, token, cache, pos)
+    return backbone.decode_step(params, cfg, token, cache, pos)
+
+
+def make_train_batch(rng: np.random.Generator, cfg: ModelConfig, batch: int,
+                     seq_len: int):
+    """Concrete random batch (smoke tests / examples)."""
+    if cfg.family == "audio":
+        dec = min(seq_len, whisper.DEC_CTX)
+        return {
+            "frames": rng.standard_normal((batch, seq_len, cfg.d_model)).astype(np.float32),
+            "tokens": rng.integers(0, cfg.vocab, (batch, dec)).astype(np.int32),
+            "labels": rng.integers(0, cfg.vocab, (batch, dec)).astype(np.int32),
+        }
+    if cfg.family == "vlm":
+        S = seq_len - cfg.n_patches
+        return {
+            "tokens": rng.integers(0, cfg.vocab, (batch, S)).astype(np.int32),
+            "labels": rng.integers(0, cfg.vocab, (batch, S)).astype(np.int32),
+            "patches": rng.standard_normal((batch, cfg.n_patches, cfg.d_model)).astype(np.float32),
+        }
+    return {
+        "tokens": rng.integers(0, cfg.vocab, (batch, seq_len)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab, (batch, seq_len)).astype(np.int32),
+    }

@@ -1,0 +1,261 @@
+"""Generic decoder backbone covering dense / MoE / SSM / hybrid families.
+
+Layers follow ``cfg.layer_pattern`` cycled over ``cfg.n_layers``.  Per-layer
+params are stacked into pattern *groups* and the group stack is driven by
+``jax.lax.scan`` (+ optional remat), so HLO size — and therefore multi-pod
+compile time — is O(1) in depth (granite's 88 layers compile as fast as 2).
+
+Public surface:
+  init_params(key, cfg)                 -> params pytree
+  forward(params, cfg, tokens, extra)   -> (logits, aux)   train/prefill
+  init_cache(cfg, batch, seq_len)       -> decode cache pytree
+  decode_step(params, cfg, token, cache, pos) -> (logits, cache)
+  lm_loss(params, cfg, tokens, labels)  -> scalar
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import ssm
+from .scan_config import scan_apply
+from .layers import (
+    attention_decode,
+    attention_train,
+    cache_spec,
+    init_attention,
+    init_kv_cache,
+    init_mlp,
+    init_moe,
+    mlp,
+    moe_ffn,
+    rmsnorm,
+)
+
+Params = Any
+
+ATTN_KINDS = ("full", "local", "chunked")
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p: dict = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind == "mamba":
+        p["mamba"] = ssm.init_mamba(ks[0], cfg, dt)
+        return p
+    if kind == "rglru":
+        p["rec"] = ssm.init_rglru(ks[0], cfg, dt)
+    else:
+        p["attn"] = init_attention(ks[0], cfg, dt)
+    p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.mlp == "moe":
+        p["ffn"] = init_moe(ks[1], cfg, dt)
+    else:
+        p["ffn"] = init_mlp(ks[1], cfg, dt)
+    return p
+
+
+def group_layout(cfg: ModelConfig) -> tuple[int, tuple[str, ...], tuple[str, ...]]:
+    """(n_groups, group_kinds, rest_kinds)."""
+    P = len(cfg.layer_pattern)
+    n_groups, rest = divmod(cfg.n_layers, P)
+    kinds = cfg.kinds()
+    return n_groups, tuple(kinds[:P]), tuple(kinds[n_groups * P:])
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    n_groups, gkinds, rkinds = group_layout(cfg)
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    params: dict = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model ** -0.5
+        ).astype(dt)
+
+    def make_group(gkey):
+        lks = jax.random.split(gkey, len(gkinds))
+        return {f"l{i}": _init_layer(lks[i], cfg, kind)
+                for i, kind in enumerate(gkinds)}
+
+    gkeys = jax.random.split(k_layers, n_groups + 1)
+    if n_groups:
+        groups = [make_group(gkeys[g]) for g in range(n_groups)]
+        params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    if rkinds:
+        rks = jax.random.split(gkeys[-1], len(rkinds))
+        params["rest"] = {f"l{i}": _init_layer(rks[i], cfg, kind)
+                          for i, kind in enumerate(rkinds)}
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer application (train/prefill)
+# --------------------------------------------------------------------------
+def _apply_layer(p, x, kind: str, cfg: ModelConfig, positions):
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind == "mamba":
+        return x + ssm.mamba_block(p["mamba"], h, cfg), aux
+    if kind == "rglru":
+        x = x + ssm.rglru_block(p["rec"], h, cfg)
+    else:
+        attn_kind = "nope" if (kind == "full" and cfg.nope_global) else kind
+        x = x + attention_train(p["attn"], h, cfg, attn_kind, positions)
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if cfg.mlp == "moe":
+        y, aux = moe_ffn(p["ffn"], h2, cfg)
+        return x + y, aux
+    return x + mlp(p["ffn"], h2, cfg.mlp), aux
+
+
+def backbone_apply(params, cfg: ModelConfig, x, positions, remat: bool = True):
+    """Run all layers on embeddings x: (B,S,D) -> (hidden, aux_loss)."""
+    n_groups, gkinds, rkinds = group_layout(cfg)
+
+    def group_body(carry, gparams):
+        h, aux = carry
+        for i, kind in enumerate(gkinds):
+            h, a = _apply_layer(gparams[f"l{i}"], h, kind, cfg, positions)
+            aux = aux + a
+        return (h, aux), None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    aux = jnp.zeros((), jnp.float32)
+    if n_groups:
+        (x, aux), _ = scan_apply(body, (x, aux), params["groups"])
+    for i, kind in enumerate(rkinds):
+        x, a = _apply_layer(params["rest"][f"l{i}"], x, kind, cfg, positions)
+        aux = aux + a
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None, remat=True):
+    """tokens: (B,S) -> logits (B,S_total,V), aux.
+
+    ``prefix_embeds`` (B,P,D) are modality-stub embeddings early-fused in
+    front of the token embeddings (VLM patch tokens).
+    """
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, aux = backbone_apply(params, cfg, x, positions, remat=remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    return logits, aux
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, prefix_embeds=None,
+            remat=True):
+    """Next-token cross-entropy (labels = tokens shifted by caller; -1 pad).
+
+    Returns scalar loss (+ router aux with weight 0.01 for MoE).
+    """
+    logits, aux = forward(params, cfg, tokens, prefix_embeds, remat=remat)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1)
+    return loss + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch, seq_len, dt):
+    if kind == "mamba":
+        return ssm.init_mamba_cache(cfg, batch, dt)
+    if kind == "rglru":
+        return ssm.init_rglru_cache(cfg, batch, dt)
+    return init_kv_cache(cfg, cache_spec(kind, cfg.window, seq_len), batch, dt)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    dt = _dtype(cfg)
+    n_groups, gkinds, rkinds = group_layout(cfg)
+    cache: dict = {}
+    if n_groups:
+        def one_group():
+            return {f"l{i}": _init_layer_cache(cfg, kind, batch, seq_len, dt)
+                    for i, kind in enumerate(gkinds)}
+        groups = [one_group() for _ in range(n_groups)]
+        cache["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    if rkinds:
+        cache["rest"] = {f"l{i}": _init_layer_cache(cfg, kind, batch, seq_len, dt)
+                         for i, kind in enumerate(rkinds)}
+    return cache
+
+
+def _apply_layer_decode(p, x, kind: str, cfg: ModelConfig, layer_cache, pos):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind == "mamba":
+        y, new_cache = ssm.mamba_step(p["mamba"], h, layer_cache, cfg)
+        return x + y, new_cache
+    if kind == "rglru":
+        y, new_cache = ssm.rglru_step(p["rec"], h, layer_cache, cfg)
+        x = x + y
+    else:
+        attn_kind = "nope" if (kind == "full" and cfg.nope_global) else kind
+        y, new_cache = attention_decode(p["attn"], h, layer_cache, pos, cfg, attn_kind)
+        x = x + y
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if cfg.mlp == "moe":
+        y, _ = moe_ffn(p["ffn"], h2, cfg)
+        return x + y, new_cache
+    return x + mlp(p["ffn"], h2, cfg.mlp), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    """token: (B,1) int32; pos: scalar int32.  -> (logits (B,1,V), cache)."""
+    n_groups, gkinds, rkinds = group_layout(cfg)
+    x = params["embed"].astype(_dtype(cfg))[token]
+
+    def group_body(x, scanned):
+        gparams, gcache = scanned
+        new_gcache = {}
+        for i, kind in enumerate(gkinds):
+            x, nc = _apply_layer_decode(gparams[f"l{i}"], x, kind, cfg,
+                                        gcache[f"l{i}"], pos)
+            new_gcache[f"l{i}"] = nc
+        return x, new_gcache
+
+    new_cache: dict = {}
+    if n_groups:
+        x, new_cache["groups"] = scan_apply(
+            group_body, x, (params["groups"], cache["groups"])
+        )
+    if rkinds:
+        new_cache["rest"] = {}
+        for i, kind in enumerate(rkinds):
+            x, nc = _apply_layer_decode(params["rest"][f"l{i}"], x, kind, cfg,
+                                        cache["rest"][f"l{i}"], pos)
+            new_cache["rest"][f"l{i}"] = nc
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return x @ head.astype(x.dtype), new_cache

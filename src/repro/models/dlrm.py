@@ -1,0 +1,113 @@
+"""DLRM models for the paper's workloads: WDL [12], DeepFM [24], DCN [66].
+
+One flat embedding table over the concatenated field vocabularies (ids are
+pre-offset by the data pipeline) — exactly the "global embedding table"
+that the PS holds in the paper; the ESD layer manages which rows live in
+which worker cache.  Dense features go through the bottom MLP; interaction
+is model-specific (wide linear / FM / cross network); top MLP emits the CTR
+logit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.dlrm_configs import DLRMConfig
+from ..data.synthetic import CTRWorkload
+from .layers import init_linear, linear
+
+
+def init_params(key, cfg: DLRMConfig, workload: CTRWorkload):
+    V, E = workload.vocab, cfg.embedding_dim
+    F = workload.n_fields
+    ks = jax.random.split(key, 10)
+    p = {
+        "embed": jax.random.normal(ks[0], (V, E), jnp.float32) * 0.01,
+        "bottom": _init_mlp(ks[1], workload.n_dense, (*cfg.mlp_dims, E)),
+    }
+    # interaction blocks: F single-hot fields + 1 pooled multi-hot history
+    # bag + 1 dense projection
+    inter_dim = {"wdl": E, "dfm": E, "dcn": E * (F + 2)}[cfg.kind]
+    p["top"] = _init_mlp(ks[2], inter_dim, (*cfg.mlp_dims, 1))
+    if cfg.kind == "wdl":
+        p["wide"] = jax.random.normal(ks[3], (V, 1), jnp.float32) * 0.01
+    if cfg.kind == "dcn":
+        d = E * (F + 2)
+        p["cross_w"] = jax.random.normal(ks[4], (cfg.cross_layers, d), jnp.float32) * (d ** -0.5)
+        p["cross_b"] = jnp.zeros((cfg.cross_layers, d), jnp.float32)
+    return p
+
+
+def _init_mlp(key, din, dims):
+    layers = []
+    for i, dout in enumerate(dims):
+        layers.append(init_linear(jax.random.fold_in(key, i), din, dout,
+                                  jnp.float32))
+        din = dout
+    return layers
+
+
+def _mlp(layers, x):
+    for i, lp in enumerate(layers):
+        x = linear(lp, x)
+        if i + 1 < len(layers):
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward(params, cfg: DLRMConfig, sparse_ids, dense, n_fields=None):
+    """sparse_ids: (B, W) flat ids (W = fixed fields + multi-hot history
+    slots, PAD=-1); dense: (B, n_dense) -> logits (B,)."""
+    from ..data.synthetic import WORKLOADS
+    F = n_fields if n_fields is not None else WORKLOADS[cfg.workload].n_fields
+    F = min(F, sparse_ids.shape[1])
+    valid = sparse_ids >= 0
+    ids = jnp.where(valid, sparse_ids, 0)
+    emb_all = params["embed"][ids] * valid[..., None]  # (B, W, E)
+    # interaction blocks: fields as-is, history mean-pooled into one block
+    fields = emb_all[:, :F]
+    hist = emb_all[:, F:]
+    hn = jnp.maximum(valid[:, F:].sum(axis=1, keepdims=True), 1)
+    pooled = hist.sum(axis=1) / hn                     # (B, E)
+    emb = jnp.concatenate([fields, pooled[:, None]], axis=1)  # (B, F+1, E)
+    d = _mlp(params["bottom"], dense)                  # (B, E)
+
+    denom = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+    if cfg.kind == "wdl":
+        deep_in = emb_all.sum(axis=1) / denom + d
+        deep = _mlp(params["top"], deep_in)[:, 0]
+        wide = (params["wide"][ids][..., 0] * valid).sum(axis=1)
+        return deep + wide
+    if cfg.kind == "dfm":
+        # FM second-order via the sum-square trick (fields + pooled + dense)
+        feats = jnp.concatenate([emb, d[:, None, :]], axis=1)  # (B, F+2, E)
+        s = feats.sum(axis=1)
+        fm = 0.5 * (s * s - (feats * feats).sum(axis=1)).sum(axis=-1)
+        first = emb_all.sum(axis=(1, 2))
+        deep = _mlp(params["top"], emb_all.sum(axis=1) / denom + d)[:, 0]
+        return deep + fm + first
+    if cfg.kind == "dcn":
+        x0 = jnp.concatenate([emb.reshape(emb.shape[0], -1), d], axis=-1)
+        x = x0
+        for l in range(cfg.cross_layers):
+            xw = x @ params["cross_w"][l]              # (B,)
+            x = x0 * xw[:, None] + params["cross_b"][l][None] + x
+        return _mlp(params["top"], x)[:, 0]
+    raise ValueError(cfg.kind)
+
+
+def bce_loss(params, cfg: DLRMConfig, sparse_ids, dense, labels):
+    logits = forward(params, cfg, sparse_ids, dense)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def train_step(params, cfg: DLRMConfig, batch, lr=1e-2):
+    """Plain-SGD step (the paper's consistency analysis assumes SGD)."""
+    loss, grads = jax.value_and_grad(bce_loss)(
+        params, cfg, batch["sparse"], batch["dense"], batch["labels"]
+    )
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return new, loss

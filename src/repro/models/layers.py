@@ -1,0 +1,402 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (full/local/chunked, train +
+decode), blockwise flash attention for long sequences, MLPs, MoE.
+
+Pure-functional: params are nested dicts of jnp arrays; every layer is a
+function (params, x, ...) -> y.  No framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .scan_config import scan_apply
+
+NEG_INF = -1e30
+FLASH_BLOCK = 512          # kv block for the scan-based flash attention
+FLASH_MIN_SEQ = 2048       # below this, use naive attention (smoke tests)
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def _rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def rope(x, positions, theta):
+    """x: (B, S, *head_dims, hd); positions: (S,) (or (...,S))."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    # insert singleton head axes so S aligns with x's sequence dim
+    for _ in range(x.ndim - 1 - ang.ndim):
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def linear(p, x):
+    return x @ p["w"].astype(x.dtype)
+
+
+def init_linear(key, din, dout, dtype, scale=None):
+    scale = scale if scale is not None else din ** -0.5
+    return {"w": (jax.random.normal(key, (din, dout), jnp.float32) * scale).astype(dtype)}
+
+
+# --------------------------------------------------------------------------
+# attention masks (analytic, per (q_pos, kv_pos) — never S x S materialized
+# except in the naive path)
+# --------------------------------------------------------------------------
+def _pair_mask(kind: str, window: int, q_pos, kv_pos):
+    """Bool mask, True = attend.  q_pos (..., Sq), kv_pos (..., Sk)."""
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    causal = k <= q
+    if kind == "full":
+        return causal
+    if kind == "local":
+        return causal & (q - k < window)
+    if kind == "chunked":
+        return causal & (q // window == k // window)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# attention — parameters
+#
+# Weights keep the GQA head structure EXPLICIT: wq (D, KV, G, hd),
+# wk/wv (D, KV, hd), wo (KV, G, hd, D).  A flat (D, H*hd) projection
+# followed by reshape(H -> (KV, G)) kills GSPMD sharding propagation — the
+# partitioner replicates the whole attention computation over the `model`
+# axis (measured 8.7x per-device FLOP inflation on smollm; EXPERIMENTS.md
+# §Perf).  With the 4D layout the head axes shard end-to-end with zero
+# reshapes.
+# --------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d, hd, H, KV = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    s = d ** -0.5
+    nrm = lambda k_, shape, sc: (jax.random.normal(k_, shape, jnp.float32) * sc).astype(dtype)
+    return {
+        "wq": nrm(ks[0], (d, KV, G, hd), s),
+        "wk": nrm(ks[1], (d, KV, hd), s),
+        "wv": nrm(ks[2], (d, KV, hd), s),
+        "wo": nrm(ks[3], (KV, G, hd, d), (H * hd) ** -0.5),
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    """x: (B,S,D) -> q (B,S,KV,G,hd), k/v (B,S,KV,hd)."""
+    from ..dist import ctx
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(x.dtype))
+    return ctx.constrain_qkv(q, k, v)
+
+
+def _gqa_logits(q, k):
+    """q: (B,Sq,KV,G,hd), k: (B,Sk,KV,hd) -> (B,KV,G,Sq,Sk)."""
+    hd = q.shape[-1]
+    return jnp.einsum("bskgh,btkh->bkgst", q, k) / np.sqrt(hd)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,KV,G,Sq,Sk), v: (B,Sk,KV,hd) -> (B,Sq,KV,G,hd)."""
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+def _proj_out(p, out):
+    """out: (B,S,KV,G,hd) -> (B,S,D)."""
+    return jnp.einsum("bskgh,kghd->bsd", out, p["wo"].astype(out.dtype))
+
+
+def attention_naive(q, k, v, kind, window, q_pos, kv_pos, bidirectional=False):
+    """q: (B,Sq,KV,G,hd), k/v: (B,Sk,KV,hd) -> (B,Sq,KV,G,hd)."""
+    logits = _gqa_logits(q, k).astype(jnp.float32)
+    if bidirectional:
+        mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    else:
+        mask = _pair_mask(kind, window, q_pos, kv_pos)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v)
+
+
+def attention_flash(q, k, v, kind, window, q_pos, kv_pos, block=None):
+    """Blockwise online-softmax attention: O(S * block) memory.
+
+    q: (B,Sq,KV,G,hd), k/v: (B,Sk,KV,hd).  Scans over KV blocks carrying
+    (max, sum, acc); masks are computed analytically per block so no (S, S)
+    tensor is ever materialized.  Baseline computes every block (masked);
+    block skipping for causal patterns is a §Perf hillclimb.
+    """
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    if block is None:
+        from . import scan_config
+        block = FLASH_BLOCK
+        if scan_config.UNROLL:   # cost probes: fewer, bigger blocks
+            block = max(FLASH_BLOCK, Sk // scan_config.PROBE_INNER_STEPS)
+    nblk = Sk // block
+    assert Sk % block == 0, (Sk, block)
+
+    kb = k.reshape(B, nblk, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    kvpb = kv_pos.reshape(nblk, block)
+
+    def body(carry, blk):
+        m, l, acc = carry          # (B,KV,G,Sq), (B,KV,G,Sq), (B,Sq,KV,G,hd)
+        kblk, vblk, kp = blk
+        logits = jnp.einsum("bskgh,btkh->bkgst", q, kblk).astype(jnp.float32)
+        logits = logits / np.sqrt(hd)
+        mask = _pair_mask(kind, window, q_pos, kp)         # (Sq, block)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkh->bskgh", p.astype(q.dtype), vblk)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None].astype(q.dtype) + pv
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, G, Sq), jnp.float32),
+        jnp.zeros((B, Sq, KV, G, hd), q.dtype),
+    )
+    (m, l, acc), _ = scan_apply(body, init, (kb, vb, kvpb))
+    denom = l.transpose(0, 3, 1, 2)[..., None]             # (B,Sq,KV,G,1)
+    return acc / jnp.maximum(denom, 1e-30).astype(q.dtype)
+
+
+def attention_train(p, x, cfg: ModelConfig, kind, positions, bidirectional=False):
+    q, k, v = _qkv(p, x, cfg)
+    if kind != "nope":  # llama4 global layers use NoPE; others get RoPE
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    kind = "full" if kind == "nope" else kind
+    S = x.shape[1]
+    if S >= FLASH_MIN_SEQ and not bidirectional and S % FLASH_BLOCK == 0:
+        out = attention_flash(q, k, v, kind, cfg.window, positions, positions)
+    else:
+        out = attention_naive(q, k, v, kind, cfg.window, positions, positions,
+                              bidirectional=bidirectional)
+    return _proj_out(p, out)
+
+
+# --------------------------------------------------------------------------
+# decode-time attention with a (ring-buffered) KV cache
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class CacheSpec:
+    size: int          # slots
+    kind: str          # full | local | chunked
+
+
+def cache_spec(kind: str, window: int, seq_len: int) -> CacheSpec:
+    if kind in ("local", "chunked"):
+        return CacheSpec(min(window, seq_len), kind)
+    return CacheSpec(seq_len, "full")
+
+
+def init_kv_cache(cfg: ModelConfig, spec: CacheSpec, batch, dtype):
+    C = spec.size
+    return {
+        "k": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.full((C,), -1, jnp.int32),   # absolute position per slot
+    }
+
+
+def attention_decode(p, x, cache, cur_pos, cfg: ModelConfig, kind):
+    """x: (B,1,D); cur_pos: scalar int32 absolute position of the new token."""
+    q, k, v = _qkv(p, x, cfg)
+    pos1 = jnp.reshape(cur_pos, (1,))
+    if kind != "nope":
+        q = rope(q, pos1, cfg.rope_theta)
+        k = rope(k, pos1, cfg.rope_theta)
+    kind = "full" if kind == "nope" else kind
+    C = cache["k"].shape[1]
+    slot = cur_pos % C
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos1.astype(jnp.int32), slot, axis=0
+    )
+    logits = _gqa_logits(q, ck).astype(jnp.float32)        # (B,KV,G,1,C)
+    window = cfg.window if cfg.window else C
+    valid = (cpos >= 0) & _pair_mask(kind, window, pos1, cpos)[0]  # (C,)
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = _gqa_out(probs, cv)
+    return _proj_out(p, out), {"k": ck, "v": cv, "pos": cpos}
+
+
+def cross_attention(p, x, enc_k, enc_v):
+    """Decoder->encoder attention (whisper); enc_k/v: (B,T,KV,hd)."""
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(x.dtype))
+    logits = _gqa_logits(q, enc_k).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, enc_v)
+    return _proj_out(p, out)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wi": init_linear(ks[0], d, ff, dtype),
+            "wg": init_linear(ks[1], d, ff, dtype),
+            "wo": init_linear(ks[2], ff, d, dtype),
+        }
+    return {  # non-gated 2-matrix (relu2: nemotron/minitron; gelu: granite)
+        "wi": init_linear(ks[0], d, ff, dtype),
+        "wo": init_linear(ks[2], ff, d, dtype),
+    }
+
+
+def mlp(p, x, kind: str):
+    if kind == "swiglu":
+        return linear(p["wo"], jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x))
+    if kind == "geglu":
+        return linear(p["wo"], jax.nn.gelu(linear(p["wg"], x)) * linear(p["wi"], x))
+    if kind == "relu2":
+        h = jax.nn.relu(linear(p["wi"], x))
+        return linear(p["wo"], h * h)
+    if kind == "gelu":
+        return linear(p["wo"], jax.nn.gelu(linear(p["wi"], x)))
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# MoE (sort-based grouped dispatch, expert-parallel friendly)
+# --------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {
+        "router": init_linear(ks[0], d, E, dtype, scale=0.02),
+        "wi": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, d, ff), jnp.float32) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, ff, d), jnp.float32) * (ff ** -0.5)).astype(dtype),
+    }
+    if cfg.shared_expert:
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {  # always-on swiglu expert (llama4)
+            "wi": init_linear(sk[0], d, ff, dtype),
+            "wg": init_linear(sk[1], d, ff, dtype),
+            "wo": init_linear(sk[2], ff, d, dtype),
+        }
+    return p
+
+
+def _moe_dispatch_block(xt, p, cfg: ModelConfig, capacity_factor: float):
+    """Sort-based capacity dispatch for ONE token block.  xt: (T, D)."""
+    T, D = xt.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (xt @ p["router"]["w"].astype(xt.dtype)).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                  # (T,K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    C = int(np.ceil(capacity_factor * T * K / E))
+    C = min(C, T)
+    eids = topi.reshape(-1)                               # (T*K,)
+    tids = jnp.repeat(jnp.arange(T), K)
+    w = topv.reshape(-1)
+
+    order = jnp.argsort(eids, stable=True)
+    se, st, sw = eids[order], tids[order], w[order]
+    grp_start = jnp.searchsorted(se, jnp.arange(E))
+    pos = jnp.arange(T * K) - grp_start[se]
+    keep = pos < C
+    slot = jnp.where(keep, pos, C)                        # C = out-of-range
+
+    buf = jnp.zeros((E, C, D), xt.dtype).at[se, slot].set(xt[st], mode="drop")
+    return buf, (se, st, sw, pos, keep), probs, topi
+
+
+def _moe_experts(p, buf, dtype):
+    hi = jnp.einsum("...ecd,edf->...ecf", buf, p["wi"].astype(dtype))
+    hg = jnp.einsum("...ecd,edf->...ecf", buf, p["wg"].astype(dtype))
+    return jnp.einsum("...ecf,efd->...ecd", jax.nn.silu(hg) * hi,
+                      p["wo"].astype(dtype))
+
+
+def _moe_combine(ho, meta, T, D, dtype):
+    se, st, sw, pos, keep = meta
+    contrib = ho[se, jnp.where(keep, pos, 0)] * (sw * keep)[:, None].astype(dtype)
+    return jnp.zeros((T, D), dtype).at[st].add(contrib)
+
+
+def moe_ffn(p, x, cfg: ModelConfig, capacity_factor: float = 1.25):
+    """x: (B,S,D).  Sort-based capacity dispatch: tokens argsorted by
+    expert, packed into an (E, C, D) buffer (over-capacity dropped),
+    expert-batched einsums over the stacked weights (sharded on E =
+    expert parallelism), outputs scattered back weighted by router probs.
+
+    When ``dist.ctx.MOE_BLOCKS > 1`` the token dim is split into that many
+    data-shard-aligned blocks and dispatch runs per block (vmap): the
+    argsort/scatter never crosses data shards, so XLA keeps dispatch local
+    and the only inter-shard traffic is the output-combine over the model
+    axis — instead of all-gathering every token to every shard
+    (EXPERIMENTS.md §Perf hillclimb 1).
+    """
+    from ..dist import ctx
+    B, S, D = x.shape
+    E = cfg.n_experts
+    T = B * S
+    xt = x.reshape(T, D)
+    nb = ctx.MOE_BLOCKS if ctx.MOE_BLOCKS > 1 and T % ctx.MOE_BLOCKS == 0 else 1
+
+    if nb > 1:
+        xb = xt.reshape(nb, T // nb, D)
+        if ctx.MOE_BLOCK_SPECS is not None:
+            xb = jax.lax.with_sharding_constraint(xb, ctx.MOE_BLOCK_SPECS[0])
+        buf, meta, probs, topi = jax.vmap(
+            lambda t: _moe_dispatch_block(t, p, cfg, capacity_factor))(xb)
+        if ctx.MOE_BLOCK_SPECS is not None:
+            buf = jax.lax.with_sharding_constraint(buf, ctx.MOE_BLOCK_SPECS[1])
+        ho = _moe_experts(p, buf, xt.dtype)
+        yt = jax.vmap(
+            lambda h, m: _moe_combine(h, m, T // nb, D, xt.dtype))(ho, meta)
+        if ctx.MOE_BLOCK_SPECS is not None:
+            yt = jax.lax.with_sharding_constraint(yt, ctx.MOE_BLOCK_SPECS[0])
+        yt = yt.reshape(T, D)
+        probs = probs.reshape(T, E)
+        topi = topi.reshape(T, cfg.top_k)
+    else:
+        buf, meta, probs, topi = _moe_dispatch_block(xt, p, cfg, capacity_factor)
+        ho = _moe_experts(p, buf, xt.dtype)
+        yt = _moe_combine(ho, meta, T, D, xt.dtype)
+
+    if cfg.shared_expert:
+        yt = yt + mlp(p["shared"], xt, "swiglu")
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=0)                               # (E,)
+    one_hot = jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32)
+    fe = one_hot.mean(axis=0)
+    aux = E * jnp.sum(me * fe)
+    return yt.reshape(B, S, D), aux

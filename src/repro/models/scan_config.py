@@ -1,0 +1,29 @@
+"""Layer-stack scan control.
+
+``UNROLL = True`` makes every stacked-layer application a Python loop
+instead of ``lax.scan``.  Production/dry-run lowering keeps scan (O(1) HLO
+in depth); the dry-run *cost probes* unroll their 1-/2-group configs so
+``cost_analysis`` counts every layer (XLA reports a while body once
+regardless of trip count — see launch/dryrun.py docstring).
+"""
+import jax
+
+UNROLL = False
+PROBE_INNER_STEPS = 8  # inner-scan steps while UNROLL (compile-time bound)
+
+
+def scan_apply(body, carry, xs):
+    """lax.scan or unrolled loop over the leading axis of ``xs``."""
+    if not UNROLL:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if all(y is None for y in ys):
+        stacked = None
+    else:
+        stacked = jax.tree.map(lambda *zs: jax.numpy.stack(zs), *ys)
+    return carry, stacked

@@ -1,0 +1,237 @@
+"""SSM mixers: Mamba-1 selective scan (falcon-mamba) and RG-LRU (griffin /
+recurrentgemma), with chunked parallel scans for training and O(1)-state
+single-token decode steps.
+
+TPU adaptation: Mamba's CUDA "hardware-aware scan" fuses the recurrence to
+avoid materializing the (B, S, d_inner, N) tensor in HBM.  The TPU-native
+equivalent is a chunked scan: a `lax.scan` over sequence chunks whose body
+runs an associative scan within the chunk — the materialized working set is
+(B, chunk, d_inner, N), VMEM/HBM-friendly, while the compute stays
+parallel.  Chunk size is a tunable (see §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .scan_config import scan_apply
+from .layers import init_linear, linear
+
+SCAN_CHUNK = 256
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv1d (shared by mamba & rglru)
+# --------------------------------------------------------------------------
+def causal_conv1d(x, w, b=None):
+    """x: (B,S,C), w: (K,C) depthwise kernel; left-padded causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    if b is not None:
+        out = out + b[None, None, :]
+    return out
+
+
+def conv_step(state, x_t, w, b=None):
+    """Single decode step.  state: (B, K-1, C), x_t: (B, C)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)   # (B,K,C)
+    out = (window * w[None]).sum(axis=1)
+    if b is not None:
+        out = out + b[None, :]
+    return out, window[:, 1:, :]
+
+
+# --------------------------------------------------------------------------
+# linear-recurrence scans:  h_t = a_t * h_{t-1} + b_t
+# --------------------------------------------------------------------------
+def _assoc(op_a, op_b):
+    a1, b1 = op_a
+    a2, b2 = op_b
+    return a1 * a2, b1 * a2 + b2
+
+
+def chunked_linear_scan(a, b, h0, chunk=None):
+    """Solve h_t = a_t h_{t-1} + b_t over axis 1 (S), chunked.
+
+    a, b: (B, S, ...) broadcast-compatible; h0: (B, ...) initial state.
+    Returns (h: (B,S,...), h_last: (B,...)).
+    """
+    B, S = a.shape[0], a.shape[1]
+    if chunk is None:
+        from . import scan_config
+        chunk = SCAN_CHUNK
+        if scan_config.UNROLL:   # cost probes: fewer, bigger chunks
+            chunk = max(SCAN_CHUNK, S // scan_config.PROBE_INNER_STEPS)
+    if S % chunk != 0 or S <= chunk:
+        # small/odd sequence: single associative scan
+        A, Bc = jax.lax.associative_scan(_assoc, (a, b), axis=1)
+        h = A * h0[:, None] + Bc
+        return h, h[:, -1]
+    nc = S // chunk
+    ar = a.reshape((B, nc, chunk) + a.shape[2:])
+    br = b.reshape((B, nc, chunk) + b.shape[2:])
+
+    def body(h, inp):
+        ac, bc = inp                                  # (B, chunk, ...)
+        A, Bc = jax.lax.associative_scan(_assoc, (ac, bc), axis=1)
+        h_chunk = A * h[:, None] + Bc
+        return h_chunk[:, -1], h_chunk
+
+    h_last, chunks = scan_apply(
+        body, h0, (ar.transpose((1, 0) + tuple(range(2, ar.ndim))),
+                   br.transpose((1, 0) + tuple(range(2, br.ndim)))),
+    )
+    h = chunks.transpose((1, 0) + tuple(range(2, chunks.ndim))).reshape(a.shape)
+    return h, h_last
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 block
+# --------------------------------------------------------------------------
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.expand * d
+    N = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_dt": init_linear(ks[2], di, dt_rank, dtype),
+        "dt_proj": init_linear(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.full((di,), -4.0, dtype),   # softplus^-1(small dt)
+        "x_B": init_linear(ks[4], di, N, dtype),
+        "x_C": init_linear(ks[5], di, N, dtype),
+        "A_log": jnp.log(A),                       # (di, N) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[6], di, d, dtype),
+    }
+
+
+def _mamba_inner(p, xc, cfg):
+    """xc: (B,S,di) post-conv post-silu.  Returns y, (a, b) scan terms."""
+    dt = jax.nn.softplus(
+        linear(p["dt_proj"], linear(p["x_dt"], xc)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )                                                    # (B,S,di)
+    Bm = linear(p["x_B"], xc).astype(jnp.float32)        # (B,S,N)
+    Cm = linear(p["x_C"], xc).astype(jnp.float32)        # (B,S,N)
+    A = -jnp.exp(p["A_log"])                             # (di,N)
+    a = jnp.exp(dt[..., None] * A[None, None])           # (B,S,di,N)
+    b = dt[..., None] * Bm[..., None, :] * xc.astype(jnp.float32)[..., None]
+    return a, b, Cm
+
+
+def mamba_block(p, x, cfg: ModelConfig):
+    """Train/prefill.  x: (B,S,D) -> (B,S,D)."""
+    B, S, _ = x.shape
+    di = cfg.expand * cfg.d_model
+    N = cfg.ssm_state
+    xz = linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv1d(xi, p["conv_w"].astype(xi.dtype), p["conv_b"].astype(xi.dtype)))
+    a, b, Cm = _mamba_inner(p, xc, cfg)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h, _ = chunked_linear_scan(a, b, h0)                 # (B,S,di,N)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm)               # (B,S,di)
+    y = y + xc.astype(jnp.float32) * p["D"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return linear(p["out_proj"], y)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch, dtype):
+    di = cfg.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_step(p, x, cache, cfg: ModelConfig):
+    """Decode.  x: (B,1,D) -> (B,1,D), updated cache (O(1) state)."""
+    B = x.shape[0]
+    xz = linear(p["in_proj"], x[:, 0])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = conv_step(
+        cache["conv"], xi, p["conv_w"].astype(xi.dtype), p["conv_b"].astype(xi.dtype)
+    )
+    xc = jax.nn.silu(xc)
+    a, b, Cm = _mamba_inner(p, xc[:, None], cfg)
+    h = a[:, 0] * cache["ssm"] + b[:, 0]                 # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = y + xc.astype(jnp.float32) * p["D"][None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return linear(p["out_proj"], y)[:, None], {"conv": conv_state, "ssm": h}
+
+
+# --------------------------------------------------------------------------
+# RG-LRU recurrent block (griffin / recurrentgemma)
+# --------------------------------------------------------------------------
+RG_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid(L)^c in [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log((u ** (1.0 / RG_C)) / (1.0 - u ** (1.0 / RG_C)))
+    return {
+        "in_x": init_linear(ks[0], d, w, dtype),
+        "in_gate": init_linear(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.d_conv, w), jnp.float32) * 0.2).astype(dtype),
+        "gate_a": init_linear(ks[3], w, w, dtype),
+        "gate_x": init_linear(ks[4], w, w, dtype),
+        "Lambda": lam,
+        "out": init_linear(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _rglru_terms(p, xc):
+    r = jax.nn.sigmoid(linear(p["gate_a"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["gate_x"], xc).astype(jnp.float32))
+    log_a = -RG_C * r * jax.nn.softplus(-p["Lambda"].astype(jnp.float32))[None]
+    a = jnp.exp(log_a)
+    gated = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    return a, b
+
+
+def rglru_block(p, x, cfg: ModelConfig):
+    """Train/prefill griffin recurrent block: conv1d + RG-LRU + GeLU gate."""
+    B, S, _ = x.shape
+    w = cfg.lru_width or cfg.d_model
+    xi = linear(p["in_x"], x)
+    gate = jax.nn.gelu(linear(p["in_gate"], x))
+    xc = causal_conv1d(xi, p["conv_w"].astype(xi.dtype))
+    a, b = _rglru_terms(p, xc)
+    h0 = jnp.zeros((B, w), jnp.float32)
+    h, _ = chunked_linear_scan(a, b, h0)                 # (B,S,w)
+    y = h.astype(x.dtype) * gate
+    return linear(p["out"], y)
+
+
+def init_rglru_cache(cfg: ModelConfig, batch, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_step(p, x, cache, cfg: ModelConfig):
+    xi = linear(p["in_x"], x[:, 0])
+    gate = jax.nn.gelu(linear(p["in_gate"], x[:, 0]))
+    xc, conv_state = conv_step(cache["conv"], xi, p["conv_w"].astype(xi.dtype))
+    a, b = _rglru_terms(p, xc)
+    h = a * cache["h"] + b
+    y = h.astype(x.dtype) * gate
+    return linear(p["out"], y)[:, None], {"conv": conv_state, "h": h}

@@ -1,0 +1,159 @@
+"""Whisper-style encoder-decoder (audio backbone).
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings (B, S_frames, D) that
+already include positional information.  We implement the transformer
+encoder (bidirectional), the decoder (causal self-attention + cross-
+attention) and the decode step with a bounded self-KV cache (Whisper's
+decoder context is 448) plus precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .scan_config import scan_apply
+from .layers import (
+    attention_decode,
+    attention_train,
+    cache_spec,
+    cross_attention,
+    init_attention,
+    init_kv_cache,
+    init_mlp,
+    linear,
+    mlp,
+    rmsnorm,
+)
+
+DEC_CTX = 448  # whisper decoder max positions
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _init_enc_layer(key, cfg, dt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": init_attention(k1, cfg, dt),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ffn": init_mlp(k2, cfg, dt),
+    }
+
+
+def _init_dec_layer(key, cfg, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": init_attention(k1, cfg, dt),
+        "norm_x": jnp.zeros((cfg.d_model,), jnp.float32),
+        "xattn": init_attention(k2, cfg, dt),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ffn": init_mlp(k3, cfg, dt),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    enc_layers = [_init_enc_layer(k, cfg, dt) for k in enc_keys]
+    dec_layers = [_init_dec_layer(k, cfg, dt) for k in dec_keys]
+    return {
+        "embed": (jax.random.normal(ks[2], (cfg.vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dt),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_layers),
+        "enc_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames, remat=True):
+    """frames: (B, S, D) stub frame embeddings -> (B, S, D) memory."""
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        x = x + attention_train(lp["attn"], h, cfg, "full", positions,
+                                bidirectional=True)
+        h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        return x + mlp(lp["ffn"], h, cfg.mlp), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = scan_apply(body_fn, frames.astype(_dtype(cfg)), params["enc"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _enc_kv(lp, memory, cfg):
+    k = jnp.einsum("btd,dkh->btkh", memory, lp["xattn"]["wk"].astype(memory.dtype))
+    v = jnp.einsum("btd,dkh->btkh", memory, lp["xattn"]["wv"].astype(memory.dtype))
+    return k, v
+
+
+def decode_train(params, cfg: ModelConfig, tokens, memory, remat=True):
+    """tokens: (B, S_dec) -> logits (B, S_dec, V)."""
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        x = x + attention_train(lp["attn"], h, cfg, "full", positions)
+        h = rmsnorm(x, lp["norm_x"], cfg.norm_eps)
+        ek, ev = _enc_kv(lp, memory, cfg)
+        x = x + cross_attention(lp["xattn"], h, ek, ev)
+        h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        return x + mlp(lp["ffn"], h, cfg.mlp), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = scan_apply(body_fn, x, params["dec"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(x.dtype)
+
+
+def loss(params, cfg: ModelConfig, frames, tokens, labels, remat=True):
+    memory = encode(params, cfg, frames, remat=remat)
+    logits = decode_train(params, cfg, tokens, memory, remat=remat).astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    return ((logz - ll) * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def init_cache(cfg: ModelConfig, batch: int, enc_len: int):
+    """Self-KV ring (448 slots) + precomputed cross K/V per layer."""
+    dt = _dtype(cfg)
+    L = cfg.n_layers
+    self_kv = init_kv_cache(cfg, cache_spec("full", 0, DEC_CTX), batch, dt)
+    return {
+        "self": jax.tree.map(lambda x: jnp.stack([x] * L), self_kv),
+        "cross_k": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, cfg.hd), dt),
+        "cross_v": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, cfg.hd), dt),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    """One decoder token against cached cross K/V.  pos < 448."""
+    x = params["embed"].astype(_dtype(cfg))[token]
+
+    def body(x, scanned):
+        lp, sc, ck, cv = scanned
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        y, nsc = attention_decode(lp["attn"], h, sc, pos, cfg, "full")
+        x = x + y
+        h = rmsnorm(x, lp["norm_x"], cfg.norm_eps)
+        x = x + cross_attention(lp["xattn"], h, ck, cv)
+        h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        return x + mlp(lp["ffn"], h, cfg.mlp), nsc
+
+    x, new_self = scan_apply(
+        body, x, (params["dec"], cache["self"], cache["cross_k"], cache["cross_v"])
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, {**cache, "self": new_self}

@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, adam, get_optimizer, rowwise_adagrad, sgd
+
+__all__ = ["Optimizer", "adam", "get_optimizer", "rowwise_adagrad", "sgd"]

@@ -1,0 +1,119 @@
+"""Cache state machine: Fig.-2 scenarios, Emark, HET, FAE."""
+import numpy as np
+import pytest
+
+from repro.core import ClusterCache, FAECache, HETCache
+
+
+def mk(n=2, V=20, cap=10, policy="emark"):
+    return ClusterCache(n, V, cap, policy=policy)
+
+
+class TestProtocol:
+    def test_cold_start_all_miss(self):
+        c = mk()
+        s = c.step([np.array([1, 2, 3]), np.array([4, 5])])
+        assert s.miss_pull.tolist() == [3, 2]
+        assert s.update_push.sum() == 0 and s.evict_push.sum() == 0
+        assert s.hits.sum() == 0
+
+    def test_rehit_same_worker_no_traffic(self):
+        c = mk()
+        c.step([np.array([1, 2]), np.array([], int)])
+        s = c.step([np.array([1, 2]), np.array([], int)])
+        assert s.miss_pull.sum() == 0
+        assert s.update_push.sum() == 0
+        assert s.hits[0] == 2
+
+    def test_update_push_on_cross_worker_need(self):
+        """Fig. 2 I2: x trained on w0, needed by w1 -> w0 pushes, w1 pulls."""
+        c = mk()
+        c.step([np.array([7]), np.array([], int)])        # w0 trains 7 (dirty)
+        s = c.step([np.array([], int), np.array([7])])
+        assert s.update_push[0] == 1
+        assert s.miss_pull[1] == 1
+
+    def test_no_push_when_only_holder_needs(self):
+        c = mk()
+        c.step([np.array([7]), np.array([], int)])
+        s = c.step([np.array([7]), np.array([], int)])
+        assert s.update_push.sum() == 0
+        assert s.miss_pull.sum() == 0
+
+    def test_stale_copy_repulled(self):
+        """w1 caches x; w0 then trains x; w1's copy is stale -> pull."""
+        c = mk()
+        c.step([np.array([], int), np.array([3])])        # w1 has latest 3
+        c.step([np.array([3]), np.array([], int)])        # w0 trains 3 (push+pull)
+        s = c.step([np.array([], int), np.array([3])])    # w1 needs again
+        assert s.miss_pull[1] == 1                        # stale -> repull
+
+    def test_evict_push_only_for_dirty_victims(self):
+        c = ClusterCache(1, 20, capacity=3, policy="lru")
+        c.step([np.array([0, 1, 2])])                     # fill, all dirty
+        s = c.step([np.array([3, 4, 5])])                 # evict 0,1,2 (dirty)
+        assert s.evict_push[0] == 3
+        s2 = c.step([np.array([6, 7, 8])])                # evict 3,4,5 dirty
+        assert s2.evict_push[0] == 3
+
+    def test_capacity_never_exceeded(self, rng):
+        c = ClusterCache(2, 50, capacity=8)
+        for _ in range(10):
+            batches = [rng.choice(50, 5, replace=False) for _ in range(2)]
+            c.step(batches)
+            assert c.present.sum(axis=1).max() <= 8
+
+    def test_hit_ratio_definition(self):
+        c = mk()
+        c.step([np.array([1]), np.array([], int)])
+        s = c.step([np.array([1, 2]), np.array([], int)])
+        assert s.lookups[0] == 2 and s.hits[0] == 1
+
+
+class TestEmark:
+    def test_outdated_evicted_first(self):
+        c = ClusterCache(2, 20, capacity=3, policy="emark")
+        c.step([np.array([0, 1, 2]), np.array([], int)])
+        # w1 trains 0 -> w0's copy of 0 becomes outdated
+        c.step([np.array([], int), np.array([0])])
+        # w0 needs one new id; the outdated 0 must be the victim
+        c.step([np.array([5]), np.array([], int)])
+        assert not c.present[0, 0]
+        assert c.present[0, 1] and c.present[0, 2]
+
+    def test_mark_epoch_increments(self):
+        c = ClusterCache(1, 30, capacity=4, policy="emark")
+        for i in range(5):
+            c.step([np.arange(i * 4, i * 4 + 4)])
+        assert c.target[0] > 1
+
+
+class TestHET:
+    def test_stale_read_within_bound_is_hit(self):
+        c = HETCache(2, 20, 10, staleness=2)
+        c.step([np.array([1]), np.array([1])])
+        s = c.step([np.array([1]), np.array([1])])
+        # both workers keep using their copies without pulling
+        assert s.miss_pull.sum() == 0
+
+    def test_lazy_push_threshold(self):
+        c = HETCache(1, 20, 10, staleness=2)
+        s1 = c.step([np.array([1])])
+        s2 = c.step([np.array([1])])   # dirty_cnt hits 2 -> push next step
+        s3 = c.step([np.array([1])])
+        assert (s1.update_push.sum(), s2.update_push.sum()) == (0, 0)
+        assert s3.update_push.sum() == 1
+
+
+class TestFAE:
+    def test_hot_ids_never_pull(self):
+        hot = np.arange(5)
+        c = FAECache(2, 20, 5, hot)
+        s = c.step([np.array([0, 1]), np.array([2])])
+        assert s.miss_pull.sum() == 0
+        assert s.hits.sum() == 3
+
+    def test_cold_ids_ps_direct(self):
+        c = FAECache(2, 20, 5, np.arange(5))
+        s = c.step([np.array([10, 11]), np.array([], int)])
+        assert s.miss_pull[0] == 2 and s.update_push[0] >= 2

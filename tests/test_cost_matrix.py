@@ -1,0 +1,83 @@
+"""Alg. 1 expected-cost matrix: numpy vs jnp vs a literal python oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_matrix_jnp, cost_matrix_np, transmission_time
+
+
+def oracle(samples, latest, dirty, t):
+    """Literal Alg. 1 (paper lines 3-9), python loops, per-sample id sets."""
+    k, _ = samples.shape
+    n = latest.shape[0]
+    C = np.zeros((k, n))
+    for i in range(k):
+        ids = {x for x in samples[i] if x >= 0}
+        for j in range(n):
+            for x in ids:
+                if not latest[j, x]:
+                    C[i, j] += t[j]                  # miss pull
+                for jp in range(n):
+                    if jp != j and dirty[jp, x]:
+                        C[i, j] += t[jp]             # update push
+    return C
+
+
+@pytest.fixture
+def instance(rng):
+    n, V, k, F = 4, 60, 10, 5
+    latest = rng.random((n, V)) > 0.5
+    dirty = (rng.random((n, V)) > 0.7) & latest
+    t = np.array([1.0, 1.0, 10.0, 10.0])
+    samples = rng.integers(0, V, (k, F))
+    samples[rng.random((k, F)) < 0.15] = -1
+    return samples, latest, dirty, t
+
+
+def test_np_matches_oracle(instance):
+    s, latest, dirty, t = instance
+    np.testing.assert_allclose(cost_matrix_np(s, latest, dirty, t),
+                               oracle(s, latest, dirty, t))
+
+
+def test_jnp_matches_np(instance):
+    s, latest, dirty, t = instance
+    got = cost_matrix_jnp(jnp.asarray(s), jnp.asarray(latest),
+                          jnp.asarray(dirty), jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(got),
+                               cost_matrix_np(s, latest, dirty, t),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_duplicate_ids_count_once(rng):
+    latest = np.zeros((2, 10), bool)
+    dirty = np.zeros((2, 10), bool)
+    t = np.ones(2)
+    s_dup = np.array([[3, 3, 3, -1]])
+    s_one = np.array([[3, -1, -1, -1]])
+    C_dup = cost_matrix_np(s_dup, latest, dirty, t)
+    C_one = cost_matrix_np(s_one, latest, dirty, t)
+    np.testing.assert_allclose(C_dup, C_one)
+
+
+def test_heterogeneous_bandwidth_prefers_fast_worker():
+    """All else equal, the 10x-slower worker must cost 10x."""
+    latest = np.zeros((2, 5), bool)
+    dirty = np.zeros((2, 5), bool)
+    t = transmission_time(2048.0, np.array([5e9 / 8, 0.5e9 / 8]))
+    C = cost_matrix_np(np.array([[0, 1]]), latest, dirty, t)
+    assert C[0, 1] == pytest.approx(10 * C[0, 0])
+
+
+def test_update_push_charged_to_holder():
+    """Dispatching to the dirty holder itself avoids its push cost."""
+    latest = np.ones((2, 5), bool)
+    dirty = np.zeros((2, 5), bool)
+    dirty[0, 2] = True
+    latest[1, 2] = False          # only holder has the newest version
+    t = np.array([1.0, 100.0])
+    C = cost_matrix_np(np.array([[2]]), latest, dirty, t)
+    # on worker 0 (holder): no miss (latest), no push -> 0
+    assert C[0, 0] == 0
+    # on worker 1: miss pull (t1) + holder push (t0)
+    assert C[0, 1] == pytest.approx(100.0 + 1.0)

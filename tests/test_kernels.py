@@ -1,0 +1,91 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_matrix_np, hungarian_dispatch
+from repro.kernels import auction_solve_pallas, cost_matrix_pallas
+from repro.kernels.auction import auction_bids
+from repro.kernels.emb_lookup import pooled_lookup
+from repro.kernels.ref import auction_bids_ref, pooled_lookup_ref
+
+
+class TestPooledLookup:
+    @pytest.mark.parametrize("B,F,V,E", [
+        (4, 3, 50, 16), (8, 7, 100, 130), (2, 1, 10, 128),
+        (16, 5, 1000, 512), (1, 9, 33, 7),
+    ])
+    def test_shapes(self, rng, B, F, V, E):
+        table = rng.standard_normal((V, E)).astype(np.float32)
+        ids = rng.integers(-1, V, (B, F)).astype(np.int32)
+        w = rng.random((B, F)).astype(np.float32)
+        got = pooled_lookup(jnp.asarray(table), jnp.asarray(ids), jnp.asarray(w))
+        want = pooled_lookup_ref(jnp.asarray(table), jnp.asarray(ids),
+                                 jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    def test_dtypes(self, rng, dtype):
+        table = jnp.asarray(rng.standard_normal((64, 32)), dtype)
+        ids = jnp.asarray(rng.integers(0, 64, (4, 6)), jnp.int32)
+        got = pooled_lookup(table, ids)
+        want = pooled_lookup_ref(table, ids)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_all_pad_row(self, rng):
+        table = jnp.asarray(rng.standard_normal((10, 8)), jnp.float32)
+        ids = jnp.asarray([[-1, -1], [2, 3]], jnp.int32)
+        got = np.asarray(pooled_lookup(table, ids))
+        assert np.allclose(got[0], 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 6), st.integers(1, 8), st.integers(2, 40),
+           st.integers(1, 96))
+    def test_property_sweep(self, B, F, V, E):
+        rng = np.random.default_rng(B * 1000 + F * 100 + V * 10 + E)
+        table = rng.standard_normal((V, E)).astype(np.float32)
+        ids = rng.integers(-1, V, (B, F)).astype(np.int32)
+        got = pooled_lookup(jnp.asarray(table), jnp.asarray(ids))
+        want = pooled_lookup_ref(jnp.asarray(table), jnp.asarray(ids))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestAuctionKernel:
+    @pytest.mark.parametrize("k,n", [(16, 4), (100, 8), (257, 16), (64, 1)])
+    def test_bids_match_ref(self, rng, k, n):
+        cost = (rng.random((k, n)) * 10).astype(np.float32)
+        minp = rng.random(n).astype(np.float32)
+        un = rng.random(k) > 0.3
+        bj, bid = auction_bids(jnp.asarray(cost), jnp.asarray(minp),
+                               jnp.asarray(un), jnp.asarray(0.01))
+        rj, rbid = auction_bids_ref(jnp.asarray(cost), jnp.asarray(minp),
+                                    jnp.asarray(un), 0.01)
+        if n > 1:
+            np.testing.assert_array_equal(np.asarray(bj), np.asarray(rj))
+        np.testing.assert_allclose(np.asarray(bid), np.asarray(rbid),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_solve_optimal(self, rng):
+        k, n, m = 12, 3, 4
+        c = rng.integers(0, 30, (k, n)).astype(np.float32)
+        a, _ = auction_solve_pallas(c, m, eps=1.0 / (k + 1))
+        ch = c[np.arange(k), hungarian_dispatch(c.astype(float), m)].sum()
+        assert c[np.arange(k), np.asarray(a)].sum() == pytest.approx(ch)
+
+
+class TestCostMatrixKernel:
+    def test_matches_numpy(self, rng):
+        n, V, k, F = 4, 200, 16, 6
+        latest = rng.random((n, V)) > 0.5
+        dirty = (rng.random((n, V)) > 0.8) & latest
+        t = np.array([1.0, 1.0, 10.0, 10.0])
+        samples = rng.integers(0, V, (k, F))
+        samples[rng.random((k, F)) < 0.1] = -1
+        want = cost_matrix_np(samples, latest, dirty, t)
+        got = cost_matrix_pallas(jnp.asarray(samples), jnp.asarray(latest),
+                                 jnp.asarray(dirty), jnp.asarray(t))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,125 @@
+"""Substrates: data pipeline, optimizers, checkpointing, simulator."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core import SimConfig, simulate
+from repro.data import DispatchingLoader, PrefetchLoader, WORKLOADS, zipf_ids
+from repro.optim import adam, rowwise_adagrad, sgd
+
+
+class TestData:
+    def test_zipf_skew(self, rng):
+        ids = zipf_ids(rng, 1.2, 20_000, 1000)
+        counts = np.bincount(ids, minlength=1000)
+        # head dominates: top-10 ids take a large share
+        assert counts[np.argsort(-counts)[:10]].sum() > 0.35 * len(ids)
+        assert ids.min() >= 0 and ids.max() < 1000
+
+    def test_workload_batch_shapes(self, rng):
+        wl = WORKLOADS["tiny"]
+        s = wl.sample_batch(rng, 32)
+        assert s.shape == (32, wl.width)
+        off = wl.offsets()
+        for f in range(wl.n_fields):
+            hi = off[f] + wl.table_sizes[f]
+            assert (s[:, f] >= off[f]).all() and (s[:, f] < hi).all()
+        hist = s[:, wl.n_fields:]
+        valid = hist >= 0
+        assert valid.any() and (~valid).any()   # variable lengths
+        assert (hist[valid] < wl.table_sizes[0]).all()
+
+    def test_prefetch_order(self):
+        out = list(PrefetchLoader(iter(range(10)), depth=3))
+        assert out == list(range(10))
+
+    def test_prefetch_error_propagates(self):
+        def bad():
+            yield 1
+            raise RuntimeError("boom")
+        it = PrefetchLoader(bad())
+        assert next(it) == 1
+        with pytest.raises(RuntimeError):
+            next(it)
+            next(it)
+
+    def test_dispatching_loader_applies_fn(self):
+        out = list(DispatchingLoader(iter(range(5)), lambda x: x * 10))
+        assert out == [0, 10, 20, 30, 40]
+
+
+class TestOptim:
+    @pytest.mark.parametrize("make", [lambda: sgd(0.1), lambda: adam(0.05),
+                                      lambda: rowwise_adagrad(0.5)])
+    def test_descends_quadratic(self, make):
+        opt = make()
+        params = {"w": jnp.ones((4, 3)), "b": jnp.ones((3,))}
+        state = opt.init(params)
+
+        def loss(p):
+            return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+        l0 = float(loss(params))
+        for _ in range(30):
+            grads = jax.grad(loss)(params)
+            params, state = opt.update(grads, state, params)
+        assert float(loss(params)) < 0.2 * l0
+
+    def test_rowwise_state_is_one_scalar_per_row(self):
+        opt = rowwise_adagrad()
+        st = opt.init({"emb": jnp.zeros((100, 16))})
+        assert st["emb"].shape == (100,)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, rng):
+        tree = {"a": {"w": jnp.asarray(rng.random((3, 4)), jnp.float32)},
+                "b": [jnp.arange(5), jnp.ones((2, 2), jnp.bfloat16)]}
+        save_checkpoint(tmp_path, 7, tree)
+        assert latest_step(tmp_path) == 7
+        restored, step = restore_checkpoint(tmp_path, tree)
+        assert step == 7
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32))
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save_checkpoint(tmp_path, 1, {"w": jnp.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(tmp_path, {"w": jnp.zeros((3, 3))})
+
+
+class TestSimulator:
+    @pytest.fixture(scope="class")
+    def results(self):
+        base = dict(workload=WORKLOADS["tiny"], n_workers=4,
+                    batch_per_worker=32, iters=30, warmup=5, cache_ratio=0.15,
+                    seed=1)
+        out = {}
+        for mech, alpha in [("esd", 1.0), ("esd", 0.0), ("laia", 0.0),
+                            ("random", 0.0)]:
+            out[(mech, alpha)] = simulate(
+                SimConfig(mechanism=mech, alpha=alpha, **base))
+        return out
+
+    def test_esd_beats_random(self, results):
+        assert results[("esd", 1.0)].cost < results[("random", 0.0)].cost
+        assert results[("esd", 0.0)].cost < results[("random", 0.0)].cost
+
+    def test_esd_competitive_with_laia(self, results):
+        """At tiny scale (V=4.4k, 30 iters) LAIA's hit-chasing can edge out
+        the one-step expected-cost optimum; ESD must stay within 10 % here.
+        The paper-scale comparison (where ESD wins 9-14 %) is
+        benchmarks/paper_experiments.fig4_overall."""
+        assert results[("esd", 1.0)].cost < 1.10 * results[("laia", 0.0)].cost
+
+    def test_metrics_populated(self, results):
+        r = results[("esd", 1.0)]
+        assert 0.0 <= r.hit_ratio <= 1.0
+        assert r.decision_time_mean > 0
+        ing = r.ingredient
+        assert sum(sum(c.values()) for c in ing.values()) > 0
