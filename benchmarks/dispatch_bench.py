@@ -1,0 +1,170 @@
+"""Dispatch-step benchmark: dense vs sparse cost-matrix + cache-update.
+
+Measures the two per-iteration ESD hot paths at paper-scale vocabularies
+(V in {2e4, 2e5, 1e6}, n = 8 workers, m = 128 samples/worker):
+
+  * jit path   — cost_matrix_{jnp,sparse_jnp} + esd_state_update{,_sparse}
+                 (what runs inside the jitted TPU train step);
+  * numpy path — snapshot + cost_matrix_np + ClusterCache.step vs
+                 state_columns + cost_from_state_cols + SparseClusterCache
+                 (what the paper-faithful simulator runs).
+
+Writes benchmarks/results/BENCH_dispatch.json so future PRs can track the
+perf trajectory.  The sparse path must grow sub-linearly in V; the dense
+path is vocab-bound.
+"""
+from __future__ import annotations
+
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ClusterCache,
+    SparseClusterCache,
+    batch_unique_np,
+    cost_from_state_cols,
+    cost_matrix_jnp,
+    cost_matrix_np,
+    cost_matrix_sparse_jnp,
+)
+from repro.core.dispatch_tpu import (
+    esd_init,
+    esd_sparse_init,
+    esd_state_update,
+    esd_state_update_sparse,
+)
+
+RESULTS = Path(__file__).parent / "results"
+N, M, F = 8, 128, 26
+CACHE_RATIO = 0.08
+
+
+def _capacity(V: int) -> int:
+    # keep room for one worker's batch footprint (~M*F unique ids) so the
+    # pinned current iteration never exceeds capacity
+    return max(int(CACHE_RATIO * V), 2 * M * F)
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                   # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e3    # ms
+
+
+def _mk_instance(V: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    k = N * M
+    samples = rng.integers(0, V, (k, F)).astype(np.int32)
+    samples[rng.random((k, F)) < 0.1] = -1
+    latest = rng.random((N, V)) > 0.6
+    dirty = (rng.random((N, V)) > 0.85) & latest
+    t_tran = rng.random(N).astype(np.float32) * 1e-5 + 1e-6
+    need = np.zeros((N, V), bool)
+    ids_list = np.full((N, M * F), -1, np.int32)
+    for j in range(N):
+        ids = np.unique(samples[j * M:(j + 1) * M])
+        ids = ids[ids >= 0]
+        need[j, ids] = True
+        ids_list[j, :len(ids)] = ids
+    return samples, latest, dirty, t_tran, need, ids_list
+
+
+def bench_jit(V: int, reps: int) -> dict:
+    """The in-train-step pipelines, jitted with donated state — the same
+    execution regime (fusion + in-place buffer reuse) the real jitted
+    train step gets; eager timing would mis-measure both paths."""
+    samples, latest, dirty, t_tran, need, ids_list = _mk_instance(V)
+    cap = _capacity(V)
+    sj, lj, dj, tj = (jnp.asarray(samples), jnp.asarray(latest),
+                      jnp.asarray(dirty), jnp.asarray(t_tran))
+    needj, idsj = jnp.asarray(need), jnp.asarray(ids_list)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def dense_step(state, s, lat, dr, t, need):
+        C = cost_matrix_jnp(s, lat, dr, t)
+        state, counts = esd_state_update(state, need, cap)
+        return state, C, counts
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def sparse_step(state, s, lat, dr, t, need):
+        C = cost_matrix_sparse_jnp(s, lat, dr, t)
+        state, counts = esd_state_update_sparse(state, need, cap)
+        return state, C, counts
+
+    # sanity: both cost paths agree before we time them
+    np.testing.assert_allclose(
+        np.asarray(cost_matrix_sparse_jnp(sj, lj, dj, tj)),
+        np.asarray(cost_matrix_jnp(sj, lj, dj, tj)), rtol=1e-4, atol=1e-9)
+
+    def timed(step, state, need):
+        state, C, counts = step(state, sj, lj, dj, tj, need)   # compile
+        C.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            state, C, counts = step(state, sj, lj, dj, tj, need)
+            C.block_until_ready()
+            counts["miss_pull"].block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e3
+
+    dense_ms = timed(dense_step, esd_init(N, V), needj)
+    sparse_ms = timed(sparse_step, esd_sparse_init(N, V, cap, M * F), idsj)
+    return {"dense_ms": dense_ms, "sparse_ms": sparse_ms,
+            "speedup": dense_ms / sparse_ms}
+
+
+def bench_numpy(V: int, reps: int) -> dict:
+    samples, latest, dirty, t_tran, need, _ = _mk_instance(V)
+    cap = _capacity(V)
+    batches = [np.where(need[j])[0] for j in range(N)]
+
+    dense_cache = ClusterCache(N, V, cap, policy="lru")
+    sparse_cache = SparseClusterCache(N, V, cap, policy="lru")
+
+    def dense():
+        lat, dr = dense_cache.snapshot()
+        cost_matrix_np(samples, lat, dr, t_tran)
+        dense_cache.step(batches)
+
+    def sparse():
+        ids, mask, uids, inv = batch_unique_np(samples)
+        latU, dirU = sparse_cache.state_columns(uids)
+        cost_from_state_cols(inv, mask, latU, dirU, t_tran)
+        sparse_cache.step(batches)
+
+    dense_ms, sparse_ms = _time(dense, reps), _time(sparse, reps)
+    return {"dense_ms": dense_ms, "sparse_ms": sparse_ms,
+            "speedup": dense_ms / sparse_ms}
+
+
+def run(quick: bool = False, out: Path | None = None) -> dict:
+    vocabs = [20_000] if quick else [20_000, 200_000, 1_000_000]
+    report = {"config": {"n": N, "m": M, "F": F, "cache_ratio": CACHE_RATIO},
+              "results": []}
+    for V in vocabs:
+        reps = 5 if V <= 20_000 else 3
+        jit = bench_jit(V, reps)
+        npy = bench_numpy(V, reps)
+        report["results"].append({"V": V, "jit": jit, "numpy": npy})
+        print(f"dispatch.V{V}.jit,{jit['sparse_ms'] * 1e3:.0f},"
+              f"dense_us={jit['dense_ms'] * 1e3:.0f},"
+              f"speedup={jit['speedup']:.1f}x")
+        print(f"dispatch.V{V}.numpy,{npy['sparse_ms'] * 1e3:.0f},"
+              f"dense_us={npy['dense_ms'] * 1e3:.0f},"
+              f"speedup={npy['speedup']:.1f}x")
+    out = out or RESULTS / "BENCH_dispatch.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    return report
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

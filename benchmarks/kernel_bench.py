@@ -22,15 +22,22 @@ def _t(fn, *a):
     return (time.perf_counter() - t0) * 1e6
 
 
-def run():
+def run(quick: bool = False):
     rng = np.random.default_rng(0)
-    for B, F, V, E in [(64, 8, 5000, 128), (256, 26, 20000, 512)]:
+    sizes = [(64, 8, 5000, 128)]
+    if not quick:                 # the big config takes minutes interpreted
+        sizes.append((256, 26, 20000, 512))
+    for B, F, V, E in sizes:
         table = jnp.asarray(rng.standard_normal((V, E)), jnp.float32)
         ids = jnp.asarray(rng.integers(0, V, (B, F)), jnp.int32)
         us_k = _t(lambda t, i: pooled_lookup(t, i).block_until_ready(), table, ids)
+        us_b = _t(lambda t, i: pooled_lookup(t, i, block_f=8)
+                  .block_until_ready(), table, ids)
         us_r = _t(lambda t, i: pooled_lookup_ref(t, i).block_until_ready(), table, ids)
-        print(f"kernel.pooled_lookup.B{B}F{F}E{E}.pallas_interpret,{us_k:.0f},ref_us={us_r:.0f}")
+        print(f"kernel.pooled_lookup.B{B}F{F}E{E}.pallas_interpret,{us_k:.0f},"
+              f"blocked_us={us_b:.0f},ref_us={us_r:.0f}")
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="figs 4-6 only, fewer sizes")
     ap.add_argument("--only", default=None,
-                    help="comma-list: table2,paper,kernels,roofline")
+                    help="comma-list: table2,paper,kernels,dispatch,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -39,7 +39,11 @@ def main() -> None:
 
     if only is None or "kernels" in only:
         from . import kernel_bench
-        kernel_bench.run()
+        kernel_bench.run(quick=args.quick)
+
+    if only is None or "dispatch" in only:
+        from . import dispatch_bench
+        dispatch_bench.run(quick=args.quick)
 
     if only is None or "roofline" in only:
         from . import roofline

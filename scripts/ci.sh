@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# One-command verify recipe: tier-1 tests (default = not slow) + kernel and
+# dispatch benchmark smoke.
+#
+#   scripts/ci.sh              # fast tier-1 + bench smoke
+#   scripts/ci.sh --slow       # also run the @slow paper-scale tests
+#
+# tests/test_models_smoke.py and tests/test_system.py are excluded: they
+# depend on the `repro.dist` LM/parallelism subsystem which is missing
+# from the seed (see ROADMAP "Open items"); run the full suite with
+# `pytest -q` to see their (pre-existing) failures.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+RUN_SLOW=0
+for arg in "$@"; do
+  [ "$arg" = "--slow" ] && RUN_SLOW=1
+done
+
+IGNORES=(--ignore=tests/test_models_smoke.py --ignore=tests/test_system.py)
+python -m pytest -q -x "${IGNORES[@]}"
+if [ "$RUN_SLOW" = 1 ]; then
+  python -m pytest -q -m slow "${IGNORES[@]}"
+fi
+
+# bench smoke: kernels (interpret mode) + dispatch-step dense-vs-sparse
+python -m benchmarks.run --quick --only kernels,dispatch
+echo "ci.sh: OK"

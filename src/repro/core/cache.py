@@ -20,6 +20,16 @@ phases, counting the three transmission-operation types:
 Eviction policies: ``emark`` (§8.1: outdated first, then mark epoch, then
 frequency), ``lru``, ``lfu``.  Ids needed by the current iteration are
 pinned and never evicted.
+
+Two engines:
+  * :class:`ClusterCache` — dense reference: (n, V) boolean-plane algebra,
+    O(n*V) per iteration.
+  * :class:`SparseClusterCache` — touched-ids engine: identical protocol,
+    accounting, and eviction decisions (equivalence-tested), but every
+    per-iteration phase only reads/writes the <= k*F ids the iteration
+    touches, and eviction scans the bounded resident set (<= capacity)
+    instead of all V.  At paper scale (V = 1e6) this is the difference
+    between vocab-bound and batch-bound simulation.
 """
 from __future__ import annotations
 
@@ -28,7 +38,7 @@ from typing import Literal, Sequence
 
 import numpy as np
 
-__all__ = ["ClusterCache", "IterStats", "Policy"]
+__all__ = ["ClusterCache", "SparseClusterCache", "IterStats", "Policy"]
 
 Policy = Literal["emark", "lru", "lfu"]
 
@@ -87,6 +97,12 @@ class ClusterCache:
     def snapshot(self):
         """Cache snapshots used by the dispatcher (paper §5)."""
         return self.latest_in_cache.copy(), self.dirty.copy()
+
+    def state_columns(self, uids: np.ndarray):
+        """(latest_in_cache[:, uids], dirty[:, uids]) — the touched-ids
+        view Alg. 1 needs, without materializing a dense snapshot."""
+        return (self.present[:, uids] & self.latest[:, uids],
+                self.dirty[:, uids])
 
     # -- one BSP iteration ---------------------------------------------------
     def step(self, batches: Sequence[np.ndarray]) -> IterStats:
@@ -175,6 +191,13 @@ class ClusterCache:
     # -- eviction ------------------------------------------------------------
     def _pick_victims(self, j: int, pinned: np.ndarray, count: int) -> np.ndarray:
         cand = np.where(self.present[j] & ~pinned)[0]
+        resident = np.where(self.present[j])[0]
+        return self._select_victims(j, cand, resident, count)
+
+    def _select_victims(self, j: int, cand: np.ndarray, resident: np.ndarray,
+                        count: int) -> np.ndarray:
+        """Shared victim-selection core (dense + sparse engines): cand must
+        be sorted ascending so argpartition tie-breaks are engine-invariant."""
         if len(cand) < count:
             raise RuntimeError(
                 f"worker {j}: cannot evict {count} of {len(cand)} candidates "
@@ -184,7 +207,7 @@ class ClusterCache:
         victims = cand[np.argpartition(key, count - 1)[:count]]
         if self.policy == "emark":
             # Emark epoch bump: when every cached mark equals target, target+=1
-            if (self.mark[j, self.present[j]] >= self.target[j]).all():
+            if (self.mark[j, resident] >= self.target[j]).all():
                 self.target[j] += 1
         return victims
 
@@ -211,3 +234,144 @@ class ClusterCache:
         self.dirty[:, :] = False
         self.present[:, ids] = True
         self.latest[:, ids] = True
+
+
+class SparseClusterCache(ClusterCache):
+    """Touched-ids cluster cache: same protocol and accounting as
+    :class:`ClusterCache`, but each iteration only reads/writes the ids it
+    touches.
+
+    The (n, V) planes are kept as O(1)-lookup *storage* (so states remain
+    directly comparable with the dense engine) while all per-iteration
+    *compute* is restricted to gathered columns, and eviction candidates
+    come from the per-worker resident set (<= capacity ids) instead of an
+    O(V) scan.  Under ``sync="eager"`` the touched universe additionally
+    includes every dirty id (the full-set sync pushes them all).
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._resident = [set() for _ in range(self.n)]
+        self._dirtyset = [set() for _ in range(self.n)]
+
+    # -- one BSP iteration ---------------------------------------------------
+    def step(self, batches: Sequence[np.ndarray]) -> IterStats:
+        n = self.n
+        self.it += 1
+        # dense `step` scatters batches into a bool plane, which both
+        # de-duplicates and sorts; np.unique gives the same set semantics.
+        batches = [np.unique(np.asarray(ids, dtype=np.int64))
+                   for ids in batches]
+        parts = [b for b in batches if len(b)]
+        if self.sync == "eager":
+            dirty_union = set().union(*self._dirtyset) if any(self._dirtyset) else set()
+            if dirty_union:
+                parts.append(np.fromiter(dirty_union, np.int64, len(dirty_union)))
+        touched = (np.unique(np.concatenate(parts)) if parts
+                   else np.zeros(0, np.int64))
+        U = len(touched)
+
+        needU = np.zeros((n, U), bool)
+        for j, ids in enumerate(batches):
+            if len(ids):
+                needU[j, np.searchsorted(touched, ids)] = True
+
+        stats = IterStats(
+            miss_pull=np.zeros(n, np.int64),
+            update_push=np.zeros(n, np.int64),
+            evict_push=np.zeros(n, np.int64),
+            lookups=np.array([len(b) for b in batches], np.int64),
+            hits=np.zeros(n, np.int64),
+        )
+        if U == 0:
+            return stats
+
+        latU = self.latest[:, touched]
+        dirU = self.dirty[:, touched]
+        presU = self.present[:, touched]
+
+        # ---- Phase A: update push (on touched columns only) ----------------
+        need_any = needU.any(axis=0)
+        sole = needU & (needU.sum(axis=0) == 1)[None, :]
+        need_other = need_any[None, :] & ~sole
+        pushers = dirU.copy() if self.sync == "eager" else dirU & need_other
+        stats.update_push += pushers.sum(axis=1)
+        pushed = pushers.any(axis=0)
+        multi = pushers.sum(axis=0) > 1
+        latU &= ~(pushed[None, :] & ~pushers) & ~multi[None, :]
+        dirU &= ~pushers
+        self.latest[:, touched] = latU
+        self.dirty[:, touched] = dirU
+        for j in range(n):
+            if pushers[j].any():
+                self._dirtyset[j].difference_update(
+                    touched[pushers[j]].tolist())
+
+        stats.hits += (needU & presU & latU).sum(axis=1)
+
+        # ---- Phase B: miss pull (+ bounded-candidate evictions) ------------
+        for j in range(n):
+            ids = batches[j]
+            if not len(ids):
+                continue
+            have = self.present[j, ids] & self.latest[j, ids]
+            miss_ids = ids[~have]
+            stats.miss_pull[j] += len(miss_ids)
+            resident_stale = miss_ids[self.present[j, miss_ids]]
+            self.latest[j, resident_stale] = True
+            new_ids = miss_ids[~self.present[j, miss_ids]]
+            if len(new_ids):
+                free = self.capacity - len(self._resident[j])
+                overflow = len(new_ids) - free
+                if overflow > 0:
+                    victims = self._pick_victims_sparse(j, ids, overflow)
+                    vdirty = victims[self.dirty[j, victims]]
+                    stats.evict_push[j] += len(vdirty)
+                    if len(vdirty):
+                        self.dirty[j, vdirty] = False
+                        self._dirtyset[j].difference_update(vdirty.tolist())
+                        others = np.arange(n) != j
+                        self.latest[np.ix_(others, vdirty)] = False
+                    self.present[j, victims] = False
+                    self.latest[j, victims] = False
+                    self._resident[j].difference_update(victims.tolist())
+                self.present[j, new_ids] = True
+                self.latest[j, new_ids] = True
+                self._resident[j].update(new_ids.tolist())
+
+        # ---- Phase C: train ------------------------------------------------
+        for j in range(n):
+            ids = batches[j]
+            if not len(ids):
+                continue
+            self.dirty[j, ids] = True
+            self._dirtyset[j].update(ids.tolist())
+            self.latest[j, ids] = True
+            self.freq[j, ids] += 1
+            self.last_access[j, ids] = self.it
+            self.mark[j, ids] = self.target[j]
+        # copies on workers that did NOT train x become stale — only
+        # touched columns can change
+        lat = self.latest[:, touched]
+        lat &= ~(need_any[None, :] & ~needU)
+        self.latest[:, touched] = lat
+        return stats
+
+    # -- eviction (bounded candidate set) ------------------------------------
+    def _pick_victims_sparse(self, j: int, pinned_ids: np.ndarray,
+                             count: int) -> np.ndarray:
+        # sorted ascending so keys (and argpartition tie-breaks) line up
+        # exactly with the dense engine's np.where scan order
+        cand_set = self._resident[j].difference(pinned_ids.tolist())
+        cand = np.fromiter(cand_set, np.int64, len(cand_set))
+        cand.sort()
+        resident = np.fromiter(self._resident[j], np.int64,
+                               len(self._resident[j]))
+        return self._select_victims(j, cand, resident, count)
+
+    # -- warm start ----------------------------------------------------------
+    def prefill(self, hot_ids: np.ndarray):
+        super().prefill(hot_ids)
+        ids = np.asarray(hot_ids)[: self.capacity].tolist()
+        self._resident = [set(ids) for _ in range(self.n)]
+        self._dirtyset = [set() for _ in range(self.n)]

@@ -9,16 +9,27 @@ training sample ``E_i`` on worker ``w_j``:
   * update push — for every id x in E_i that some other worker j' trained
                   last iteration (dirty copy):   += T_{j'}   (line 8-9)
 
-Two implementations:
+Implementations (all equivalence-tested against each other):
   * :func:`cost_matrix_np` — numpy, the paper-faithful simulator path.
-  * :func:`cost_matrix_jnp` — jnp/XLA, used inside the jitted TPU dispatch
-    step (and the pooled-lookup identity used by kernels/emb_lookup).
+  * :func:`cost_matrix_jnp` — jnp/XLA via the dense (V, n) per-id table.
+  * :func:`cost_matrix_sparse` — numpy touched-ids path: per-id cost rows
+    are built only for the <= k*F unique ids the batch touches.
+  * :func:`cost_matrix_sparse_jnp` — jnp touched-ids path (jit friendly,
+    no (V, n) table), used inside the jitted TPU dispatch step.
 
 The jnp path exploits the identity (DESIGN.md §3): define the per-id cost
 row  v[x, j] = (1 - latest_in_cache[j, x]) * T[j] + sum_{j' != j} dirty[j', x] * T[j'];
 then  C[i, :] = sum_{x in E_i} v[x, :]  — i.e. the Alg. 1 matrix is a pooled
 embedding lookup with "embedding dim" n.  That is what lets the same Pallas
 gather-sum kernel serve both the model's sparse features and ESD itself.
+
+Dense vs sparse crossover: the dense paths do O(V*n) work per iteration
+(materializing the (V, n) table, or gathering against full planes), while
+the sparse paths do O(k*F*n) — independent of the vocabulary.  A batch
+touches at most k*F ids, so the sparse path wins whenever k*F < V, i.e.
+for every realistic config (paper: k*F ~ 2.6e4 vs V ~ 1e6); the dense
+paths only remain competitive for toy vocabularies (V below a few
+thousand) where the table build is amortized by XLA fusion.
 """
 from __future__ import annotations
 
@@ -26,7 +37,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-__all__ = ["transmission_time", "cost_matrix_np", "per_id_cost_rows", "cost_matrix_jnp"]
+__all__ = [
+    "transmission_time", "cost_matrix_np", "per_id_cost_rows",
+    "cost_matrix_jnp", "dedup_mask_np", "dedup_mask_jnp", "batch_unique_np",
+    "cost_from_state_cols", "cost_matrix_sparse", "cost_matrix_sparse_jnp",
+]
 
 PAD_ID = -1  # padding slot inside a sample's id list
 
@@ -34,6 +49,68 @@ PAD_ID = -1  # padding slot inside a sample's id list
 def transmission_time(d_tran_bytes: float, bandwidth_bytes_per_s: np.ndarray) -> np.ndarray:
     """T_j = D_tran / B_j (paper Table 1)."""
     return np.asarray(d_tran_bytes, np.float64) / np.asarray(bandwidth_bytes_per_s, np.float64)
+
+
+# --------------------------------------------------------------------------
+# shared per-sample id de-duplication
+# --------------------------------------------------------------------------
+def dedup_mask_np(samples: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(ids, mask): PAD clamped to 0 (for safe gathers), mask keeps the
+    first occurrence of each id within every sample (a worker pulls a
+    missing embedding once per iteration — per-sample set semantics).
+
+    Dedup runs on the raw values so PAD slots (-1) group separately from
+    a real id 0 — clamping before dedup would swallow id 0 whenever a
+    PAD precedes it in the sample."""
+    samples = np.asarray(samples)
+    valid = samples != PAD_ID
+    ids = np.where(valid, samples, 0)
+    sort_idx = np.argsort(samples, axis=1, kind="stable")
+    sorted_ids = np.take_along_axis(samples, sort_idx, axis=1)
+    first = np.ones_like(sorted_ids, dtype=bool)
+    first[:, 1:] = sorted_ids[:, 1:] != sorted_ids[:, :-1]
+    dedup = np.zeros_like(first)
+    np.put_along_axis(dedup, sort_idx, first, axis=1)
+    return ids, valid & dedup
+
+
+def dedup_mask_jnp(samples: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp twin of :func:`dedup_mask_np` (jit/shard_map friendly)."""
+    k, _ = samples.shape
+    valid = samples != PAD_ID
+    ids = jnp.where(valid, samples, 0)
+    sort_idx = jnp.argsort(samples, axis=1, stable=True)
+    sorted_ids = jnp.take_along_axis(samples, sort_idx, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((k, 1), bool), sorted_ids[:, 1:] != sorted_ids[:, :-1]], axis=1
+    )
+    dedup = jnp.zeros_like(first).at[jnp.arange(k)[:, None], sort_idx].set(first)
+    return ids, valid & dedup
+
+
+# --------------------------------------------------------------------------
+# dense paths
+# --------------------------------------------------------------------------
+def _cost_from_gathers(latest_g: np.ndarray, dirty_g: np.ndarray,
+                       valid: np.ndarray, t_tran: np.ndarray) -> np.ndarray:
+    """Alg. 1 arithmetic on (n, k, F) gathered state.
+
+    Shared by the dense and sparse numpy paths — same operations in the
+    same order, so the two are *bitwise* equal (assignment tie-breaks
+    downstream see identical costs).
+    """
+    # miss pull
+    miss = (~latest_g) & valid[None, :, :]        # (n, k, F)
+    miss_cost = miss.sum(axis=2).T * t_tran[None, :]   # (k, n)
+
+    # update push: cost of other dirty holders pushing to the PS.
+    push_any = (dirty_g * t_tran[:, None, None]).sum(axis=0)   # (k, F) total push cost of all holders
+    push_any = np.where(valid, push_any, 0.0)
+    # subtract the self-term: if w_j itself is the dirty holder, no push.
+    self_push = dirty_g * t_tran[:, None, None]   # (n, k, F)
+    self_push = np.where(valid[None], self_push, 0.0)
+    push_cost = push_any.sum(axis=1)[:, None] - self_push.sum(axis=2).T  # (k, n)
+    return miss_cost + push_cost
 
 
 def cost_matrix_np(
@@ -56,35 +133,9 @@ def cost_matrix_np(
     Returns:
       (k, n) float64 cost matrix.
     """
-    samples = np.asarray(samples)
-    k, F = samples.shape
-    n = latest_in_cache.shape[0]
-    valid = samples != PAD_ID
-    ids = np.where(valid, samples, 0)
-
-    # de-duplicate ids within each sample: keep first occurrence only
-    sort_idx = np.argsort(ids, axis=1, kind="stable")
-    sorted_ids = np.take_along_axis(ids, sort_idx, axis=1)
-    first = np.ones_like(sorted_ids, dtype=bool)
-    first[:, 1:] = sorted_ids[:, 1:] != sorted_ids[:, :-1]
-    dedup = np.zeros_like(first)
-    np.put_along_axis(dedup, sort_idx, first, axis=1)
-    valid = valid & dedup
-
-    # miss pull: (k, F, n) -> latest_in_cache[:, ids].T gathers
-    latest_g = latest_in_cache[:, ids]            # (n, k, F)
-    miss = (~latest_g) & valid[None, :, :]        # (n, k, F)
-    miss_cost = miss.sum(axis=2).T * t_tran[None, :]   # (k, n)
-
-    # update push: cost of other dirty holders pushing to the PS.
-    dirty_g = dirty[:, ids]                       # (n, k, F)
-    push_any = (dirty_g * t_tran[:, None, None]).sum(axis=0)   # (k, F) total push cost of all holders
-    push_any = np.where(valid, push_any, 0.0)
-    # subtract the self-term: if w_j itself is the dirty holder, no push.
-    self_push = dirty_g * t_tran[:, None, None]   # (n, k, F)
-    self_push = np.where(valid[None], self_push, 0.0)
-    push_cost = push_any.sum(axis=1)[:, None] - self_push.sum(axis=2).T  # (k, n)
-    return miss_cost + push_cost
+    ids, valid = dedup_mask_np(samples)
+    return _cost_from_gathers(latest_in_cache[:, ids], dirty[:, ids],
+                              valid, t_tran)
 
 
 def per_id_cost_rows(
@@ -108,24 +159,90 @@ def cost_matrix_jnp(
     dirty: jnp.ndarray,
     t_tran: jnp.ndarray,
 ) -> jnp.ndarray:
-    """jnp Alg. 1 via the pooled-lookup identity (jit/shard_map friendly).
+    """jnp Alg. 1 via the dense pooled-lookup identity (O(V*n) table).
 
     Same contract as :func:`cost_matrix_np` (including per-sample id
-    de-duplication), returning float32.
+    de-duplication), returning float32.  Prefer
+    :func:`cost_matrix_sparse_jnp` unless V is tiny (see module docstring).
     """
-    k, F = samples.shape
-    valid = samples != PAD_ID
-    ids = jnp.where(valid, samples, 0)
-
-    sort_idx = jnp.argsort(ids, axis=1, stable=True)
-    sorted_ids = jnp.take_along_axis(ids, sort_idx, axis=1)
-    first = jnp.concatenate(
-        [jnp.ones((k, 1), bool), sorted_ids[:, 1:] != sorted_ids[:, :-1]], axis=1
-    )
-    dedup = jnp.zeros_like(first).at[jnp.arange(k)[:, None], sort_idx].set(first)
-    valid = valid & dedup
-
+    ids, valid = dedup_mask_jnp(samples)
     v = per_id_cost_rows(latest_in_cache, dirty, t_tran)      # (V, n)
     rows = v[ids]                                             # (k, F, n)
     rows = jnp.where(valid[:, :, None], rows, 0.0)
     return rows.sum(axis=1)                                   # (k, n)
+
+
+# --------------------------------------------------------------------------
+# sparse (touched-ids) paths — O(k*F*n), independent of V
+# --------------------------------------------------------------------------
+def batch_unique_np(samples: np.ndarray):
+    """(ids, mask, uids, inv): the batch's unique valid ids plus the
+    compact index of every (sample, slot) into them.
+
+    ``uids`` is sorted ascending; ``inv[i, f]`` indexes uids for valid
+    slots and is clipped in-bounds (mask zero) elsewhere.
+    """
+    ids, mask = dedup_mask_np(samples)
+    flat = ids[mask]
+    uids = np.unique(flat) if flat.size else np.zeros(0, ids.dtype)
+    if uids.size:
+        inv = np.searchsorted(uids, ids)
+        inv = np.minimum(inv, uids.size - 1)
+    else:
+        inv = np.zeros_like(ids)
+    return ids, mask, uids, inv
+
+
+def cost_from_state_cols(inv: np.ndarray, mask: np.ndarray,
+                         lat_cols: np.ndarray, dirty_cols: np.ndarray,
+                         t_tran: np.ndarray) -> np.ndarray:
+    """(k, n) Alg. 1 from state gathered at the batch's unique ids only.
+
+    inv/mask come from :func:`batch_unique_np`; lat_cols/dirty_cols are
+    (n, U) — e.g. ``cache.state_columns(uids)``.  Expands the compact
+    columns through ``inv`` and runs the exact dense arithmetic, so the
+    result is bitwise-equal to :func:`cost_matrix_np` while never touching
+    more than the U <= k*F ids in flight.
+    """
+    n = lat_cols.shape[0]
+    if lat_cols.shape[1] == 0:
+        return np.zeros((inv.shape[0], n), np.float64)
+    return _cost_from_gathers(lat_cols[:, inv], dirty_cols[:, inv],
+                              mask, t_tran)
+
+
+def cost_matrix_sparse(
+    samples: np.ndarray,
+    latest_in_cache: np.ndarray,
+    dirty: np.ndarray,
+    t_tran: np.ndarray,
+) -> np.ndarray:
+    """Touched-ids Alg. 1 (numpy): gather state columns only for the
+    batch's unique ids, then pool.  Same contract as — and bitwise equal
+    to — :func:`cost_matrix_np`; O(k*F*n) with no O(V) term."""
+    ids, mask, uids, inv = batch_unique_np(samples)
+    return cost_from_state_cols(inv, mask, latest_in_cache[:, uids],
+                                dirty[:, uids], t_tran)
+
+
+def cost_matrix_sparse_jnp(
+    samples: jnp.ndarray,
+    latest_in_cache: jnp.ndarray,
+    dirty: jnp.ndarray,
+    t_tran: jnp.ndarray,
+) -> jnp.ndarray:
+    """Touched-ids Alg. 1 (jnp): gather state at the batch's ids directly —
+    no (V, n) table, no unique — so the jitted dispatch step scales with
+    the batch, not the vocabulary.  Same contract as
+    :func:`cost_matrix_jnp`, returning float32."""
+    k, F = samples.shape
+    n = latest_in_cache.shape[0]
+    ids, valid = dedup_mask_jnp(samples)
+    # per_id_cost_rows is shape-generic: feed it the gathered (n, k*F)
+    # columns instead of the full (V, n) planes
+    lat_g = latest_in_cache[:, ids].reshape(n, k * F)
+    dirty_g = dirty[:, ids].reshape(n, k * F)
+    rows = per_id_cost_rows(lat_g, dirty_g,
+                            t_tran.astype(jnp.float32)).reshape(k, F, n)
+    rows = jnp.where(valid[:, :, None], rows, 0.0)
+    return rows.sum(axis=1)

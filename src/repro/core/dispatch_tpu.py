@@ -14,13 +14,27 @@ Mapping of the paper's edge mechanism onto a TPU mesh (DESIGN.md §2):
     collective, no ragged exchange.
 
 Everything here is jit-compatible (runs inside the train step):
-  * Alg. 1 cost matrix  — core.cost.cost_matrix_jnp (or the Pallas kernel);
+  * Alg. 1 cost matrix  — core.cost.cost_matrix_sparse_jnp by default
+    (touched-ids gathers, O(k*F*n)); the dense cost_matrix_jnp and the
+    Pallas kernels remain selectable via ``esd_dispatch``;
   * Heu                 — greedy scan with workload caps;
   * Opt                 — fixed-phase eps-scaled auction (while_loops);
   * HybridDis           — regret-sorted split between them (Alg. 2);
-  * cache state machine — vectorized phases A/B/C of core.cache, with
-    optional LRU capacity enforcement (top_k) and full miss-pull /
-    update-push / evict-push accounting.
+  * cache state machine — two engines:
+      - ``esd_state_update``: dense (n, V) boolean-plane phases A/B/C with
+        a full-vocab LRU top_k — the O(n*V)-per-step reference;
+      - ``esd_state_update_sparse``: incremental update keyed on the
+        (n, L) padded id lists each worker actually needs; scatter/gather
+        touches only those ids, and the LRU cut runs over a bounded
+        candidate set (previous survivors + this step's ids, <= capacity
+        + 2L slots) instead of all V.  Equivalence-tested against the
+        dense engine (identical counts and state), so the per-step cost is
+        batch-bound: at V = 1e6 the dense top_k alone is ~O(n*V*log V)
+        while the sparse cut is O(n*(capacity + L)).
+
+Dense-vs-sparse crossover: like core.cost, the dense engine only wins for
+toy vocabularies (V below a few thousand); everything paper-scale should
+run the sparse engine.
 """
 from __future__ import annotations
 
@@ -33,10 +47,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .auction import _repair, _round_body
-from .cost import cost_matrix_jnp
+from .cost import cost_matrix_jnp, cost_matrix_sparse_jnp
 
 __all__ = ["EsdState", "esd_init", "esd_dispatch", "esd_state_update",
-           "heu_dispatch_jax", "auction_fixed", "hybrid_dispatch_jax"]
+           "SparseEsdState", "esd_sparse_init", "esd_state_update_sparse",
+           "need_ids_list", "heu_dispatch_jax", "auction_fixed",
+           "hybrid_dispatch_jax"]
 
 
 # --------------------------------------------------------------------------
@@ -148,8 +164,10 @@ class EsdState:
 
 
 def esd_init(n_workers: int, vocab: int) -> EsdState:
-    z = jnp.zeros((n_workers, vocab), bool)
-    return EsdState(z, z, jnp.zeros((n_workers, vocab), jnp.int32),
+    # latest/dirty must be distinct buffers (donation rejects aliases)
+    return EsdState(jnp.zeros((n_workers, vocab), bool),
+                    jnp.zeros((n_workers, vocab), bool),
+                    jnp.zeros((n_workers, vocab), jnp.int32),
                     jnp.zeros((), jnp.int32))
 
 
@@ -190,11 +208,18 @@ def esd_state_update(state: EsdState, need: jnp.ndarray,
     # optional LRU capacity: evict all but the `capacity` most recent
     evict_push = jnp.zeros((n,), jnp.int32)
     if capacity is not None and capacity < V:
-        # strict LRU cut: tie-break equal access times by id so the keep
-        # set is exactly `capacity` (+ pinned current ids)
-        key = last_access.astype(jnp.int64) * V + jnp.arange(V)[None, :]
-        kth = jax.lax.top_k(key, capacity)[0][:, -1]
-        keep = key >= kth[:, None]
+        # strict LRU cut on the (last_access, id) pair: tie-break equal
+        # access times by id so the keep set is exactly `capacity`
+        # (+ pinned current ids).  A two-key lexicographic sort avoids
+        # the int32 overflow a packed last_access*V + id key would hit
+        # at paper scale (x64 is disabled, so int64 silently truncates).
+        ids_row = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32), (n, V))
+        sla, sid = jax.lax.sort((last_access, ids_row), dimension=1,
+                                num_keys=2)
+        kth_la = sla[:, V - capacity][:, None]
+        kth_id = sid[:, V - capacity][:, None]
+        keep = (last_access > kth_la) | ((last_access == kth_la)
+                                         & (ids_row >= kth_id))
         keep = keep | need            # pinned
         evicted = latest & ~keep
         evict_push = (evicted & dirty).sum(axis=1)
@@ -208,23 +233,191 @@ def esd_state_update(state: EsdState, need: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# sparse (touched-ids) cache state + accounting
+# --------------------------------------------------------------------------
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("latest", "dirty", "last_access", "slots", "step"),
+         meta_fields=())
+@dataclasses.dataclass
+class SparseEsdState:
+    """Replicated cache state for the incremental engine.
+
+    latest/dirty/last_access are the same (n, V) planes as
+    :class:`EsdState` — kept as O(1)-lookup storage, but only ever
+    scatter-updated at touched ids.  ``slots`` (n, S) holds the ids that
+    survived the last LRU cut (PAD = -1); it is the bounded candidate set
+    the next cut ranks, so no step ever sorts all V keys.
+    """
+    latest: jnp.ndarray        # (n, V) bool
+    dirty: jnp.ndarray         # (n, V) bool
+    last_access: jnp.ndarray   # (n, V) int32
+    slots: jnp.ndarray         # (n, S) int32, PAD = -1
+    step: jnp.ndarray          # () int32
+
+
+def esd_sparse_init(n_workers: int, vocab: int, capacity: Optional[int] = None,
+                    max_ids: int = 0) -> SparseEsdState:
+    """``max_ids`` = L, the per-worker padded id-list width the state will
+    be stepped with (needed to size the slot buffer: S = capacity + L)."""
+    S = 0 if capacity is None or capacity >= vocab else capacity + max_ids
+    return SparseEsdState(jnp.zeros((n_workers, vocab), bool),
+                          jnp.zeros((n_workers, vocab), bool),
+                          jnp.zeros((n_workers, vocab), jnp.int32),
+                          jnp.full((n_workers, S), -1, jnp.int32),
+                          jnp.zeros((), jnp.int32))
+
+
+def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
+                            capacity: Optional[int] = None):
+    """Incremental BSP iteration: same protocol and counts as
+    :func:`esd_state_update`, driven by touched ids only.
+
+    need_ids: (n, L) int32 — the ids each worker trains this iteration,
+    **unique within each row**, PAD = -1 (see :func:`need_ids_list`).
+    Returns (new_state, counts).
+    """
+    n, L = need_ids.shape
+    V = state.latest.shape[1]
+    step = state.step + 1
+    valid = need_ids >= 0
+
+    # touched-id universe: sorted unique over all workers, pad sentinel V
+    flat = jnp.where(valid, need_ids, V).reshape(-1)
+    uids = jnp.unique(flat, size=n * L, fill_value=V)          # (U,) sorted
+    uvalid = uids < V
+    g = jnp.minimum(uids, V - 1)                               # safe gather col
+    rows = jnp.arange(n)[:, None]
+
+    # need membership on the compact universe
+    pos = jnp.searchsorted(uids, jnp.where(valid, need_ids, V))
+    needU = (jnp.zeros((n, uids.shape[0]), jnp.int32)
+             .at[rows, pos].add(valid.astype(jnp.int32), mode="drop")) > 0
+
+    latU = state.latest[:, g] & uvalid[None, :]
+    dirU = state.dirty[:, g] & uvalid[None, :]
+    lastU = state.last_access[:, g]
+
+    # Phase A: on-demand update push
+    need_anyU = needU.any(axis=0)
+    sole = needU & (needU.sum(axis=0) == 1)[None, :]
+    need_other = need_anyU[None, :] & ~sole
+    pushers = dirU & need_other
+    update_push = pushers.sum(axis=1)
+    pushed = pushers.any(axis=0)
+    multi = pushers.sum(axis=0) > 1
+    latU = latU & ~(pushed[None, :] & ~pushers) & ~multi[None, :]
+    dirU = dirU & ~pushers
+
+    # Phase B: miss pull
+    miss = needU & ~latU
+    miss_pull = miss.sum(axis=1)
+    latU = latU | needU
+
+    # Phase C: train
+    dirU = dirU | needU
+    latU = latU & ~(need_anyU[None, :] & ~needU)
+    lastU = jnp.where(needU, step, lastU)
+
+    # scatter the touched columns back; pad columns are routed out of
+    # bounds and dropped so they can never alias a real column's write
+    gs = jnp.where(uvalid, uids, V)
+    latest = state.latest.at[:, gs].set(latU, mode="drop")
+    dirty = state.dirty.at[:, gs].set(dirU, mode="drop")
+    last_access = state.last_access.at[:, gs].set(lastU, mode="drop")
+
+    # optional LRU capacity: strict cut over the bounded candidate set
+    # (previous survivors + this step's ids), identical to the dense
+    # full-vocab top_k because every id outside the candidate set has a
+    # strictly smaller recency key than every id inside it.
+    #
+    # One ascending sort of the candidate keys does all the work: pinned
+    # ids (just stamped last_access = step) hold the globally largest
+    # keys, so the kept set is a contiguous suffix of the sorted keys and
+    # the evicted candidates (at most 2L of them) sit in a contiguous
+    # zone right below the top-capacity block — no argsort, no
+    # candidate-wide scatters.
+    evict_push = jnp.zeros((n,), jnp.int32)
+    slots = state.slots
+    if capacity is not None and capacity < V:
+        if slots.shape[1] < capacity + L:
+            raise ValueError(
+                f"slot buffer {slots.shape[1]} < capacity+L = {capacity + L}; "
+                "init the state with esd_sparse_init(..., capacity, max_ids=L)")
+        S = slots.shape[1]
+        # candidates: this step's ids (pinned) + previous survivors with
+        # duplicates of this step's ids masked out
+        imax = jnp.iinfo(jnp.int32).max
+        need_sorted = jnp.sort(jnp.where(valid, need_ids, imax), axis=1)
+        hit = jnp.take_along_axis(
+            need_sorted,
+            jnp.clip(jax.vmap(jnp.searchsorted)(need_sorted, slots), 0, L - 1),
+            axis=1)
+        slot_cand = jnp.where((hit == slots) & (slots >= 0), -1, slots)
+        cand = jnp.concatenate(
+            [jnp.where(valid, need_ids, -1), slot_cand], axis=1)   # (n, T)
+        cvalid = cand >= 0
+        gc = jnp.clip(cand, 0, V - 1)
+        # two-key lexicographic sort on (last_access, id): same strict
+        # order as the dense engine's cut without the int32 overflow a
+        # packed la*V + id key would hit at paper scale (x64 disabled).
+        # Invalid candidates get la = -1 so they sort below every valid
+        # one (valid la >= 0).
+        la_c = jnp.where(cvalid, last_access[rows, gc], -1)
+        sla, sid = jax.lax.sort((la_c, cand), dimension=1, num_keys=2)
+        T = cand.shape[1]
+
+        # evicted zone: valid, non-pinned entries directly below the
+        # top-capacity block (never more than 2L evictions per step)
+        zone = slice(T - capacity - 2 * L, T - capacity)
+        ev = (sla[:, zone] >= 0) & (sla[:, zone] < step)   # pinned: la==step
+        ev_ids = jnp.where(ev, sid[:, zone], V)                    # V: drop
+        egc = jnp.minimum(ev_ids, V - 1)
+        lat_e = latest[rows, egc] & ev
+        dr_e = dirty[rows, egc] & ev
+        evict_push = (lat_e & dr_e).sum(axis=1).astype(jnp.int32)
+        latest = latest.at[rows, ev_ids].set(False, mode="drop")
+        dirty = dirty.at[rows, ev_ids].set(False, mode="drop")
+
+        # new slots: the kept suffix = top-capacity block plus any pinned
+        # spill right below it (only when a batch exceeds capacity)
+        top_la, top_id = sla[:, T - S:], sid[:, T - S:]            # (n, S)
+        keepm = (top_la >= 0) & ((jnp.arange(S) >= S - capacity)[None, :]
+                                 | (top_la == step))
+        slots = jnp.where(keepm, top_id, -1)
+
+    new = SparseEsdState(latest, dirty, last_access, slots, step)
+    counts = {"miss_pull": miss_pull, "update_push": update_push,
+              "evict_push": evict_push}
+    return new, counts
+
+
+# --------------------------------------------------------------------------
 # the shard_map dispatch + exchange
 # --------------------------------------------------------------------------
-def esd_dispatch(samples, state: EsdState, t_tran, alpha: float,
-                 axis_name: str = "data", use_pallas: bool = False):
+def esd_dispatch(samples, state, t_tran, alpha: float,
+                 axis_name: str = "data", use_pallas: bool = False,
+                 sparse_cost: bool = True):
     """Inside shard_map over ``axis_name``: dispatch this shard's samples.
 
     samples: (m, F) local ids.  Returns (exchanged_samples (m, F), assign).
     Every shard sends exactly m/n samples to each worker: a static
     all_to_all.
+
+    ``sparse_cost`` selects the touched-ids Alg. 1 path (O(m*F*n), the
+    default) over the dense (V, n)-table path; both are equivalence-tested.
+    With ``use_pallas`` the corresponding Pallas kernel variant is used.
     """
     m, F = samples.shape
-    n = jax.lax.axis_size(axis_name)
+    # constant-folds to the static mesh axis size at trace time
+    # (jax.lax.axis_size is not available on this jax version)
+    n = jax.lax.psum(1, axis_name)
     if use_pallas:
-        from ..kernels.ops import cost_matrix_pallas
-        C = cost_matrix_pallas(samples, state.latest, state.dirty, t_tran)
+        from ..kernels.ops import cost_matrix_pallas, cost_matrix_pallas_sparse
+        kern = cost_matrix_pallas_sparse if sparse_cost else cost_matrix_pallas
+        C = kern(samples, state.latest, state.dirty, t_tran)
     else:
-        C = cost_matrix_jnp(samples, state.latest, state.dirty, t_tran)
+        fn = cost_matrix_sparse_jnp if sparse_cost else cost_matrix_jnp
+        C = fn(samples, state.latest, state.dirty, t_tran)
     assign = hybrid_dispatch_jax(C, m, alpha)
     order = jnp.argsort(assign, stable=True)             # groups of m/n
     routed = samples[order].reshape(n, m // n, F)
@@ -237,3 +430,15 @@ def need_matrix(local_samples, axis_name: str, vocab: int):
     idx = jnp.where(local_samples >= 0, local_samples, vocab)  # PAD -> OOB
     mine = jnp.zeros((vocab,), bool).at[idx.reshape(-1)].set(True, mode="drop")
     return jax.lax.all_gather(mine, axis_name)           # (n, V)
+
+
+def need_ids_list(local_samples, axis_name: str):
+    """(n, L) padded unique-id lists from each shard's post-exchange
+    samples — the sparse twin of :func:`need_matrix` (L = m*F, PAD = -1).
+    Rows are unique and sorted, as :func:`esd_state_update_sparse` requires."""
+    imax = jnp.iinfo(jnp.int32).max
+    flat = local_samples.reshape(-1)
+    u = jnp.unique(jnp.where(flat >= 0, flat, imax),
+                   size=flat.shape[0], fill_value=imax)
+    mine = jnp.where(u == imax, -1, u).astype(jnp.int32)
+    return jax.lax.all_gather(mine, axis_name)           # (n, L)

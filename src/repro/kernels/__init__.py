@@ -8,7 +8,9 @@
 """
 from . import auction, emb_lookup, flash_attn, ops, ref
 from .flash_attn import flash_attention
-from .ops import auction_solve_pallas, cost_matrix_pallas
+from .ops import (auction_solve_pallas, cost_matrix_pallas,
+                  cost_matrix_pallas_sparse)
 
 __all__ = ["auction", "emb_lookup", "flash_attn", "ops", "ref",
-           "auction_solve_pallas", "cost_matrix_pallas", "flash_attention"]
+           "auction_solve_pallas", "cost_matrix_pallas",
+           "cost_matrix_pallas_sparse", "flash_attention"]

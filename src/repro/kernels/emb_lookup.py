@@ -3,14 +3,22 @@
 The DLRM hot-spot — for each sample (bag) of F ids, fetch F rows of the
 embedding table and sum them — AND, via the Alg.-1 identity (core/cost.py),
 the ESD expected-cost matrix itself: with ``table = per_id_cost_rows()``
-(V, n) and bags = samples, the pooled sum IS the cost matrix C.
+(V, n) and bags = samples, the pooled sum IS the cost matrix C.  The
+sparse engine serves the same kernel a compact (U, n) table holding only
+the batch's touched ids (kernels/ops.cost_matrix_pallas_sparse), so the
+kernel never sees the vocabulary.
 
-TPU adaptation of the CUDA gather: instead of thread-level gather, the row
-index streams in through scalar prefetch (``PrefetchScalarGridSpec``) and
-the BlockSpec ``index_map`` selects which table row block is DMA'd
-HBM->VMEM for each grid step — the idiomatic TPU embedding-gather pattern.
-Grid = (bags, E-blocks, ids-per-bag) with the id dimension innermost so the
-output block accumulates in VMEM across the F steps (zeroed at f == 0).
+TPU adaptation of the CUDA gather — two variants:
+
+  * per-row (``block_f=None``): the row index streams in through scalar
+    prefetch (``PrefetchScalarGridSpec``) and the BlockSpec ``index_map``
+    selects which table row block is DMA'd HBM->VMEM for each grid step —
+    grid (bags, E-blocks, ids-per-bag), one row DMA per step.
+  * blocked (``block_f=t``): grid (bags, E-blocks, F/t); each step keeps
+    the table in HBM (memory_space ANY) and issues t row DMAs into a VMEM
+    scratch tile with per-row semaphores, overlapping the fetches before
+    the weighted accumulate.  This amortizes grid/step overhead over a
+    tile of ids and is the building block for batch-bound ESD dispatch.
 
 Weights multiply each row (0.0 for PAD ids — the wrapper clamps PAD to row
 0 and zeroes its weight).
@@ -39,18 +47,51 @@ def _kernel(ids_ref, w_ref, table_ref, out_ref):
     out_ref[...] += table_ref[...].astype(out_ref.dtype) * w
 
 
-@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def _kernel_blocked(ids_ref, w_ref, table_ref, out_ref, tile, sems,
+                    *, block_f: int, block_e: int):
+    b = pl.program_id(0)
+    e = pl.program_id(1)
+    fb = pl.program_id(2)
+    col0 = e * block_e
+
+    @pl.when(fb == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def row_dma(i):
+        return pltpu.make_async_copy(
+            table_ref.at[ids_ref[b, fb * block_f + i],
+                         pl.ds(col0, block_e)],
+            tile.at[i],
+            sems.at[i],
+        )
+
+    # launch the whole tile of row fetches before waiting on any of them
+    for i in range(block_f):
+        row_dma(i).start()
+    acc = jnp.zeros((block_e,), out_ref.dtype)
+    for i in range(block_f):
+        row_dma(i).wait()
+        w = w_ref[b, fb * block_f + i].astype(out_ref.dtype)
+        acc += tile[i].astype(out_ref.dtype) * w
+    out_ref[...] += acc.reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_e", "block_f", "interpret"))
 def pooled_lookup(
     table: jnp.ndarray,
     ids: jnp.ndarray,
     weights: jnp.ndarray | None = None,
     *,
     block_e: int = DEFAULT_BLOCK_E,
+    block_f: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """sum_f table[ids[b, f]] * weights[b, f]  ->  (B, E).
 
     ids: (B, F) int32, PAD = -1 (weight forced to 0).
+    block_f: ids per grid step (None = one row DMA per step).
     """
     B, F = ids.shape
     V, E = table.shape
@@ -65,17 +106,45 @@ def pooled_lookup(
     Ep = E + pad_e
     n_e = Ep // block_e
 
+    if block_f is None:
+        out = pl.pallas_call(
+            _kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(B, n_e, F),
+                in_specs=[
+                    pl.BlockSpec((1, block_e),
+                                 lambda b, e, f, ids_, w_: (ids_[b, f], e)),
+                ],
+                out_specs=pl.BlockSpec((1, block_e),
+                                       lambda b, e, f, ids_, w_: (b, e)),
+            ),
+            out_shape=jax.ShapeDtypeStruct((B, Ep), jnp.float32),
+            interpret=interpret,
+        )(ids_c, w, tbl)
+        return out[:, :E]
+
+    block_f = min(block_f, F)
+    pad_f = (-F) % block_f
+    if pad_f:
+        ids_c = jnp.pad(ids_c, ((0, 0), (0, pad_f)))
+        w = jnp.pad(w, ((0, 0), (0, pad_f)))
+    n_f = (F + pad_f) // block_f
+
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel_blocked, block_f=block_f, block_e=block_e),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=(B, n_e, F),
+            grid=(B, n_e, n_f),
             in_specs=[
-                pl.BlockSpec((1, block_e),
-                             lambda b, e, f, ids_, w_: (ids_[b, f], e)),
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
             ],
             out_specs=pl.BlockSpec((1, block_e),
                                    lambda b, e, f, ids_, w_: (b, e)),
+            scratch_shapes=[
+                pltpu.VMEM((block_f, block_e), tbl.dtype),
+                pltpu.SemaphoreType.DMA((block_f,)),
+            ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Ep), jnp.float32),
         interpret=interpret,

@@ -1,11 +1,17 @@
 """jit'd wrappers: the public ops backed by the Pallas kernels.
 
-  cost_matrix_pallas  — Alg. 1 expected-cost matrix as ONE pooled-lookup
-                        kernel call (the identity from core/cost.py).
-  auction_solve_pallas — eps-scaled auction whose bid phase runs in the
-                        Pallas kernel; conflict resolution in jnp.
+  cost_matrix_pallas        — Alg. 1 expected-cost matrix as ONE pooled-
+                              lookup kernel call over the dense (V, n)
+                              per-id cost table (identity from core/cost).
+  cost_matrix_pallas_sparse — the touched-ids variant: gathers state rows
+                              for the <= k*F unique batch ids, builds a
+                              compact (U, n) table, and serves the same
+                              pooled-lookup kernel with remapped ids — the
+                              kernel never sees the vocabulary.
+  auction_solve_pallas      — eps-scaled auction whose bid phase runs in
+                              the Pallas kernel; conflict resolution in jnp.
 
-Both default to interpret mode (this container is CPU); on TPU pass
+All default to interpret mode (this container is CPU); on TPU pass
 ``interpret=False``.
 """
 from __future__ import annotations
@@ -16,29 +22,48 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cost import PAD_ID, per_id_cost_rows
+from ..core.cost import dedup_mask_jnp, per_id_cost_rows
 from .auction import NEG, auction_bids
 from .emb_lookup import pooled_lookup
 
 
 def cost_matrix_pallas(samples, latest_in_cache, dirty, t_tran, *,
-                       interpret: bool = True):
+                       interpret: bool = True, block_f: int | None = None):
     """Alg. 1 as a pooled lookup of the (V, n) per-id cost table.
 
     Matches core.cost.cost_matrix_jnp (incl. per-sample id dedup).
     """
-    k, F = samples.shape
-    valid = samples != PAD_ID
-    ids = jnp.where(valid, samples, 0)
-    sort_idx = jnp.argsort(ids, axis=1, stable=True)
-    sorted_ids = jnp.take_along_axis(ids, sort_idx, axis=1)
-    first = jnp.concatenate(
-        [jnp.ones((k, 1), bool), sorted_ids[:, 1:] != sorted_ids[:, :-1]], axis=1
-    )
-    dedup = jnp.zeros_like(first).at[jnp.arange(k)[:, None], sort_idx].set(first)
-    w = (valid & dedup).astype(jnp.float32)
+    ids, mask = dedup_mask_jnp(samples)
+    w = mask.astype(jnp.float32)
     table = per_id_cost_rows(latest_in_cache, dirty, t_tran)     # (V, n)
-    return pooled_lookup(table, ids.astype(jnp.int32), w, interpret=interpret)
+    return pooled_lookup(table, ids.astype(jnp.int32), w,
+                         block_f=block_f, interpret=interpret)
+
+
+def cost_matrix_pallas_sparse(samples, latest_in_cache, dirty, t_tran, *,
+                              interpret: bool = True,
+                              block_f: int | None = None):
+    """Touched-ids Alg. 1 on the Pallas kernel: per-id cost rows are built
+    only for the batch's unique ids (compact (U, n) table, U <= k*F) and
+    the pooled lookup runs over remapped compact indices — O(k*F*n)
+    regardless of V.  Matches core.cost.cost_matrix_sparse.
+    """
+    k, F = samples.shape
+    V = latest_in_cache.shape[1]
+    ids, mask = dedup_mask_jnp(samples)
+    w = mask.astype(jnp.float32)
+    # compact sorted id universe (pad sentinel V, masked out of the table)
+    uids = jnp.unique(jnp.where(mask, ids, V), size=k * F, fill_value=V)
+    uvalid = uids < V
+    g = jnp.minimum(uids, V - 1)
+    lat_u = latest_in_cache[:, g] & uvalid[None, :]              # (n, U)
+    dirty_u = dirty[:, g] & uvalid[None, :]
+    # per_id_cost_rows is shape-generic over the gathered (n, U) columns
+    table = per_id_cost_rows(lat_u, dirty_u, t_tran.astype(jnp.float32))
+    inv = jnp.searchsorted(uids, ids).astype(jnp.int32)          # (k, F)
+    inv = jnp.minimum(inv, uids.shape[0] - 1)
+    return pooled_lookup(table, inv, w, block_f=block_f,
+                         interpret=interpret)
 
 
 def _resolve(cost, eps, state, best_j, bid):

@@ -30,7 +30,8 @@ from jax.experimental.shard_map import shard_map
 from ..checkpoint import restore_checkpoint, save_checkpoint
 from ..configs import DLRM_CONFIGS, get_config
 from ..core.dispatch_tpu import (
-    EsdState, esd_dispatch, esd_init, esd_state_update, need_matrix,
+    EsdState, esd_dispatch, esd_init, esd_sparse_init, esd_state_update,
+    esd_state_update_sparse, need_ids_list, need_matrix,
 )
 from ..core.simulator import DEFAULT_BANDWIDTHS, GBPS
 from ..data.loader import PrefetchLoader
@@ -61,7 +62,13 @@ def run_dlrm(args):
     optimizer = get_optimizer("rowwise_adagrad", args.lr)
     params = dlrm.init_params(jax.random.key(args.seed), cfg, wl)
     opt_state = optimizer.init(params)
-    esd = esd_init(n, V)
+    sparse_esd = args.esd_engine == "sparse"
+    if sparse_esd:
+        # L = m*F ids per worker post-exchange (need_ids_list width)
+        esd = esd_sparse_init(n, V, capacity if capacity < V else None,
+                              max_ids=m * wl.width)
+    else:
+        esd = esd_init(n, V)
 
     pspecs = param_specs(params)
     shd = lambda spec: NamedSharding(mesh, spec)
@@ -70,7 +77,8 @@ def run_dlrm(args):
         def shard_fn(s, d, l):
             (s2, d2, l2), _ = esd_dispatch_aux(s, (d, l), esd_state, t_tran,
                                                args.esd_alpha or 0.0)
-            need = need_matrix(s2, "data", V)
+            need = (need_ids_list(s2, "data") if sparse_esd
+                    else need_matrix(s2, "data", V))
             return s2, d2, l2, need
 
         return shard_map(
@@ -98,7 +106,8 @@ def run_dlrm(args):
         counts = None
         if use_esd:
             sparse, dense, labels, need = dispatch(esd_state, sparse, dense, labels)
-            esd_state, counts = esd_state_update(
+            update = esd_state_update_sparse if sparse_esd else esd_state_update
+            esd_state, counts = update(
                 esd_state, need, capacity if capacity < V else None)
         loss, grads = jax.value_and_grad(dlrm.bce_loss)(
             params, cfg, sparse, dense, labels)
@@ -183,6 +192,10 @@ def build_parser():
                     help="use the reduced (CPU-sized) arch variant")
     ap.add_argument("--esd-alpha", type=float, default=None,
                     help="enable ESD dispatch with this HybridDis alpha")
+    ap.add_argument("--esd-engine", choices=("sparse", "dense"),
+                    default="sparse",
+                    help="touched-ids (sparse) or full-plane (dense) "
+                         "cost/cache engine")
     ap.add_argument("--capacity-ratio", type=float, default=0.2)
     ap.add_argument("--ckpt-dir", type=Path, default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)

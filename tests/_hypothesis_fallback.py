@@ -1,0 +1,86 @@
+"""Minimal stand-in for the tiny `hypothesis` subset these tests use.
+
+The container does not ship `hypothesis` (and we cannot pip install), so
+property tests fall back to deterministic seeded random sampling with the
+same @settings/@given/strategies surface.  If real hypothesis is
+installed it is used instead (see the import dance in the test modules).
+
+Supported: st.integers(lo, hi), st.lists(elem, min_size, max_size),
+st.data() with data.draw(strategy), @settings(max_examples, deadline),
+@given(*strategies).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elem._draw(rng) for _ in range(size)]
+    return _Strategy(draw)
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy._draw(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(_DataObject)
+
+
+class _St:
+    integers = staticmethod(integers)
+    lists = staticmethod(lists)
+    data = staticmethod(data)
+
+
+strategies = _St()
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n_examples = getattr(wrapper, "_max_examples", DEFAULT_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n_examples):
+                drawn = [s._draw(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+
+        # hide the strategy-bound (rightmost) parameters from pytest's
+        # fixture resolution, like real hypothesis does
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strats)])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -39,6 +39,7 @@ def test_dispatch_permutation_invariance(kind, rng):
                                    rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_full_training_run_identical(rng):
     """Multi-step: ESD-permuted stream == vanilla stream, same final params."""
     cfg = DLRM_CONFIGS["wdl-tiny"]

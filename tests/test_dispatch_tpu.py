@@ -127,6 +127,7 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_shard_map_dispatch_8dev():
     res = subprocess.run(
         [sys.executable, "-c", MULTIDEV_SCRIPT],

@@ -3,7 +3,11 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container has no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (
     assignment_cost,
