@@ -1,27 +1,48 @@
 #!/usr/bin/env bash
-# One-command verify recipe: tier-1 tests (default = not slow) + kernel and
-# dispatch benchmark smoke.
+# One-command verify recipe: tier-1 tests + kernel and dispatch benchmark
+# smoke.
 #
-#   scripts/ci.sh              # fast tier-1 + bench smoke
+#   scripts/ci.sh              # tier-1 (full suite, default selection) + bench smoke
 #   scripts/ci.sh --slow       # also run the @slow paper-scale tests
 #
-# tests/test_models_smoke.py and tests/test_system.py are excluded: they
-# depend on the `repro.dist` LM/parallelism subsystem which is missing
-# from the seed (see ROADMAP "Open items"); run the full suite with
-# `pytest -q` to see their (pre-existing) failures.
+# The full suite runs — including tests/test_models_smoke.py and
+# tests/test_system.py, which exercise the repro.dist sharding layer (they
+# were broken at seed; fixed in PR 2).
+#
+# Wall-time notes: the suite is jit-bound, so CI (a) disables the
+# expensive LLVM passes (the compiled programs run for microseconds;
+# correctness-neutral — no fast-math) and (b) keeps a persistent XLA
+# compilation cache so reruns only pay tracing.  tests/conftest.py also
+# provides `--shard I/N` for machines with real parallelism (this 2-vCPU
+# sandbox time-shares one core; concurrent shards measured *slower* than
+# sequential here).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# tier-1 is a CPU suite; never pay (or hang on) accelerator-driver init
+export JAX_PLATFORMS=${JAX_PLATFORMS:-cpu}
+
+# Compile-speed env for the TEST runs only (the compiled programs run for
+# microseconds, so skipping the expensive LLVM passes is a pure win and
+# correctness-neutral — no fast-math).  The bench smoke below must NOT
+# inherit these: it measures runtime.
+TEST_ENV=(
+  "XLA_FLAGS=--xla_backend_optimization_level=0 --xla_llvm_disable_expensive_passes=true${XLA_FLAGS:+ $XLA_FLAGS}"
+  "JAX_COMPILATION_CACHE_DIR=${JAX_COMPILATION_CACHE_DIR:-/tmp/repro-ci-jax-cache}"
+  "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0.2"
+)
 
 RUN_SLOW=0
 for arg in "$@"; do
   [ "$arg" = "--slow" ] && RUN_SLOW=1
 done
 
-IGNORES=(--ignore=tests/test_models_smoke.py --ignore=tests/test_system.py)
-python -m pytest -q -x "${IGNORES[@]}"
+t0=$SECONDS
+env "${TEST_ENV[@]}" python -m pytest -q --durations=10
+echo "tier-1 wall: $((SECONDS - t0))s (persistent compile cache + reduced LLVM opt)"
+
 if [ "$RUN_SLOW" = 1 ]; then
-  python -m pytest -q -m slow "${IGNORES[@]}"
+  env "${TEST_ENV[@]}" python -m pytest -q --durations=10 -m slow
 fi
 
 # bench smoke: kernels (interpret mode) + dispatch-step dense-vs-sparse

@@ -208,19 +208,25 @@ def esd_state_update(state: EsdState, need: jnp.ndarray,
     # optional LRU capacity: evict all but the `capacity` most recent
     evict_push = jnp.zeros((n,), jnp.int32)
     if capacity is not None and capacity < V:
-        # strict LRU cut on the (last_access, id) pair: tie-break equal
-        # access times by id so the keep set is exactly `capacity`
-        # (+ pinned current ids).  A two-key lexicographic sort avoids
-        # the int32 overflow a packed last_access*V + id key would hit
-        # at paper scale (x64 is disabled, so int64 silently truncates).
-        ids_row = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32), (n, V))
-        sla, sid = jax.lax.sort((last_access, ids_row), dimension=1,
-                                num_keys=2)
-        kth_la = sla[:, V - capacity][:, None]
-        kth_id = sid[:, V - capacity][:, None]
-        keep = (last_access > kth_la) | ((last_access == kth_la)
-                                         & (ids_row >= kth_id))
-        keep = keep | need            # pinned
+        if capacity == 0:
+            # nothing survives past its own iteration (the V-capacity
+            # index below would clamp to V-1 and wrongly spare one id)
+            keep = need
+        else:
+            # strict LRU cut on the (last_access, id) pair: tie-break
+            # equal access times by id so the keep set is exactly
+            # `capacity` (+ pinned current ids).  A two-key lexicographic
+            # sort avoids the int32 overflow a packed last_access*V + id
+            # key would hit at paper scale (x64 is disabled, so int64
+            # silently truncates).
+            ids_row = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32), (n, V))
+            sla, sid = jax.lax.sort((last_access, ids_row), dimension=1,
+                                    num_keys=2)
+            kth_la = sla[:, V - capacity][:, None]
+            kth_id = sid[:, V - capacity][:, None]
+            keep = (last_access > kth_la) | ((last_access == kth_la)
+                                             & (ids_row >= kth_id))
+            keep = keep | need            # pinned
         evicted = latest & ~keep
         evict_push = (evicted & dirty).sum(axis=1)
         dirty = dirty & keep

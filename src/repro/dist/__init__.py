@@ -1,0 +1,22 @@
+"""Distributed-training layer: mesh context (attention-mode selection,
+in-model sharding constraints, MoE dispatch knobs) and the PartitionSpec
+rule engine for params / optimizer state / batches / decode caches.
+
+This is the spec layer under the ROADMAP's multi-PS embedding-table
+sharding: the DLRM table's PS-row placement and the LM tensor-parallel
+placements both come out of ``sharding.param_specs``.
+"""
+from . import ctx, sharding
+from .sharding import (
+    batch_specs,
+    cache_specs,
+    data_axes,
+    param_specs,
+    to_shardings,
+    zero1_specs,
+)
+
+__all__ = [
+    "ctx", "sharding", "param_specs", "batch_specs", "cache_specs",
+    "data_axes", "zero1_specs", "to_shardings",
+]

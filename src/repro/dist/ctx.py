@@ -1,0 +1,128 @@
+"""Mesh/parallelism context: attention-mode selection + in-model sharding
+constraints.
+
+The model code (``models.layers``) is mesh-agnostic; it asks this module
+for its sharding constraints at trace time.  The launcher / dry-run calls
+``set_attention_specs(cfg, mesh)`` before lowering and ``clear()`` after,
+so tests and single-device runs (where nothing was set) trace the exact
+same functions with every constraint a no-op.
+
+Attention head-sharding modes (``attn_mode``), in preference order:
+
+  none  attention-free arch (pure SSM: falcon-mamba);
+  kv    n_kv_heads divisible by the model-axis size -> shard the KV-head
+        axis: q, k and v all shard, zero replication (best when legal);
+  g     the GQA group axis divides instead -> shard q/wo over the group
+        axis, k/v replicated (the only head split for MQA, e.g. granite's
+        kv=1 g=48);
+  seq   neither head axis divides (smollm's 15=5x3 heads, yi's kv4/g8 on
+        a 16-wide model axis) -> fall back to sequence sharding of the
+        activations; head structure stays local.
+
+MoE block-dispatch knobs (``MOE_BLOCKS``, ``MOE_BLOCK_SPECS``) are owned
+here too: ``models.layers.moe_ffn`` reads them, ``benchmarks/hillclimb.py``
+sets them (EXPERIMENTS.md §Perf hillclimb 1).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---- MoE data-shard-blocked dispatch (hillclimb hooks) --------------------
+MOE_BLOCKS: int = 1          # token-dim blocks for moe_ffn dispatch
+MOE_BLOCK_SPECS = None       # (token_block_spec, expert_buffer_spec) or None
+
+# ---- attention activation constraints (set per lowering) ------------------
+# (q_spec, kv_spec, mesh) or None when no mesh context is active.
+_QKV = None
+
+
+def data_axes(mesh: Mesh):
+    """Mesh axes that carry the batch: ('pod', 'data') on multi-pod meshes,
+    'data' otherwise.  Usable directly as one PartitionSpec entry."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def axis_size(mesh: Mesh, entry) -> int:
+    """Total device count behind one PartitionSpec entry."""
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return math.prod(mesh.shape[n] for n in names)
+
+
+def attn_mode(cfg, model_size: int) -> str:
+    """Head-sharding mode for ``cfg`` on a model axis of ``model_size``.
+
+    Encodes the divisibility rules locked in by
+    tests/test_system.py::TestShardingRules::test_attn_mode_selection.
+    """
+    if not getattr(cfg, "n_heads", 0):
+        return "none"
+    kv = cfg.n_kv_heads
+    groups = cfg.n_heads // max(kv, 1)
+    if kv % model_size == 0:
+        return "kv"
+    if groups % model_size == 0:
+        return "g"
+    return "seq"
+
+
+def qkv_specs(cfg, mesh: Mesh):
+    """(q_spec, kv_spec) for the post-projection activations
+    q: (B, S, KV, G, hd) and k/v: (B, S, KV, hd) — or None for mode none."""
+    mode = attn_mode(cfg, mesh.shape["model"])
+    dp = data_axes(mesh)
+    if mode == "kv":
+        return P(dp, None, "model", None, None), P(dp, None, "model", None)
+    if mode == "g":
+        return P(dp, None, None, "model", None), P(dp, None, None, None)
+    if mode == "seq":
+        return P(dp, "model", None, None, None), P(dp, "model", None, None)
+    return None
+
+
+def set_attention_specs(cfg, mesh: Mesh) -> str:
+    """Install the q/k/v sharding constraints for ``cfg`` on ``mesh``.
+
+    Returns the selected mode string (recorded by the dry-run).  Call
+    ``clear()`` when the lowering is done.
+    """
+    global _QKV
+    mode = attn_mode(cfg, mesh.shape["model"])
+    specs = qkv_specs(cfg, mesh)
+    _QKV = None if specs is None else (*specs, mesh)
+    return mode
+
+
+def clear():
+    """Drop the installed attention constraints (end of a lowering)."""
+    global _QKV
+    _QKV = None
+
+
+def _constrain(x, spec: P, mesh: Mesh):
+    """with_sharding_constraint with a per-dim divisibility guard: any
+    entry whose axis size does not divide the (trace-time) dim is dropped
+    (decode steps have S=1; smoke batches are tiny)."""
+    entries = [
+        e if e is not None and dim % axis_size(mesh, e) == 0 else None
+        for dim, e in zip(x.shape, spec)
+    ]
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_qkv(q, k, v):
+    """Constrain attention activations per the installed mode (no-op when
+    ``set_attention_specs`` was never called — tests, single device)."""
+    if _QKV is None:
+        return q, k, v
+    q_spec, kv_spec, mesh = _QKV
+    return (_constrain(q, q_spec, mesh),
+            _constrain(k, kv_spec, mesh),
+            _constrain(v, kv_spec, mesh))

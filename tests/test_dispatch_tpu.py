@@ -2,6 +2,7 @@
 cache protocol.  Multi-device cases run in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (tests themselves must
 keep the default single device)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -133,7 +134,10 @@ def test_shard_map_dispatch_8dev():
         [sys.executable, "-c", MULTIDEV_SCRIPT],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # the script wants 8 *host* devices; keep jax off any real
+             # accelerator the machine happens to have
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd="/root/repo",
     )
     assert "MULTIDEV_OK" in res.stdout, res.stdout + res.stderr

@@ -17,20 +17,38 @@ from repro.models import (
 
 BATCH, SEQ = 2, 32
 
+# jitted entry points (static cfg), exactly how the launcher drives the
+# models — and much faster than per-op eager dispatch on CPU.
+_loss_and_grads = jax.jit(jax.value_and_grad(train_loss),
+                          static_argnums=(1, 3))
+_decode = jax.jit(decode_step, static_argnums=(1,))
+
+
+_PARAMS_CACHE = {}
+
 
 @pytest.fixture(scope="module")
-def key():
-    return jax.random.key(0)
+def params_for():
+    """Per-arch params, initialized once and shared by the train and
+    decode tests (init is eager jax and worth ~0.5 s/arch on CPU)."""
+    def get(arch):
+        if arch not in _PARAMS_CACHE:
+            _PARAMS_CACHE[arch] = init_model(jax.random.key(0),
+                                             SMOKE_CONFIGS[arch])
+        return _PARAMS_CACHE[arch]
+    return get
 
 
 @pytest.mark.parametrize("arch", list(ARCH_IDS))
-def test_train_step_finite(arch, key, rng):
+def test_train_step_finite(arch, params_for, rng):
     cfg = SMOKE_CONFIGS[arch]
     assert cfg.n_layers <= 4 and cfg.d_model <= 256
-    params = init_model(key, cfg)
+    params = params_for(arch)
     batch = {k: jnp.asarray(v)
              for k, v in make_train_batch(rng, cfg, BATCH, SEQ).items()}
-    loss, grads = jax.value_and_grad(train_loss)(params, cfg, batch)
+    # remat=False matches the launcher's smoke path and compiles much
+    # faster; one dense arch keeps the jax.checkpoint path covered
+    loss, grads = _loss_and_grads(params, cfg, batch, arch == "smollm-360m")
     assert np.isfinite(float(loss))
     gsum = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
                for g in jax.tree.leaves(grads))
@@ -38,13 +56,13 @@ def test_train_step_finite(arch, key, rng):
 
 
 @pytest.mark.parametrize("arch", list(ARCH_IDS))
-def test_decode_step_shapes(arch, key):
+def test_decode_step_shapes(arch, params_for):
     cfg = SMOKE_CONFIGS[arch]
-    params = init_model(key, cfg)
+    params = params_for(arch)
     cache = init_decode_cache(cfg, BATCH, SEQ)
     tok = jnp.zeros((BATCH, 1), jnp.int32)
-    logits, cache2 = decode_step(params, cfg, tok, cache,
-                                 jnp.asarray(3, jnp.int32))
+    logits, cache2 = _decode(params, cfg, tok, cache,
+                             jnp.asarray(3, jnp.int32))
     assert logits.shape == (BATCH, 1, cfg.vocab)
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     # cache structure preserved
@@ -61,8 +79,8 @@ def test_decode_matches_prefill_logits():
     full_logits, _ = backbone.forward(params, cfg, toks, remat=False)
     cache = init_decode_cache(cfg, 1, 16)
     for t in range(8):
-        step_logits, cache = decode_step(params, cfg, toks[:, t:t + 1], cache,
-                                         jnp.asarray(t, jnp.int32))
+        step_logits, cache = _decode(params, cfg, toks[:, t:t + 1], cache,
+                                     jnp.asarray(t, jnp.int32))
         np.testing.assert_allclose(
             np.asarray(step_logits[:, 0], np.float32),
             np.asarray(full_logits[:, t], np.float32),
@@ -79,8 +97,8 @@ def test_mamba_decode_matches_prefill():
     full_logits, _ = backbone.forward(params, cfg, toks, remat=False)
     cache = init_decode_cache(cfg, 1, 8)
     for t in range(6):
-        step_logits, cache = decode_step(params, cfg, toks[:, t:t + 1], cache,
-                                         jnp.asarray(t, jnp.int32))
+        step_logits, cache = _decode(params, cfg, toks[:, t:t + 1], cache,
+                                     jnp.asarray(t, jnp.int32))
         np.testing.assert_allclose(
             np.asarray(step_logits[:, 0], np.float32),
             np.asarray(full_logits[:, t], np.float32),

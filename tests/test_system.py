@@ -1,6 +1,7 @@
 """End-to-end system tests: the train driver, examples surface, dry-run
 machinery units (collective parsing, probe extrapolation, skip policy)."""
 import json
+import os
 import subprocess
 import sys
 
@@ -9,10 +10,20 @@ import pytest
 
 
 def _run(argv, timeout=900):
+    # Hermetic env, except the jax platform/compiler selection: tier-1 is
+    # a CPU suite (see conftest), and dropping JAX_PLATFORMS on a TPU host
+    # makes the subprocess initialize the TPU driver instead of running
+    # the test.  XLA_FLAGS rides along so ci.sh's compile-speed flags
+    # reach the driver subprocesses too.
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+    for var in ("XLA_FLAGS", "JAX_COMPILATION_CACHE_DIR",
+                "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS"):
+        if var in os.environ:
+            env[var] = os.environ[var]
     return subprocess.run(
         [sys.executable, "-m"] + argv, capture_output=True, text=True,
-        timeout=timeout, cwd="/root/repo",
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        timeout=timeout, cwd="/root/repo", env=env,
     )
 
 
