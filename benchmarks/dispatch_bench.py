@@ -12,6 +12,12 @@ Measures the two per-iteration ESD hot paths at paper-scale vocabularies
 Writes benchmarks/results/BENCH_dispatch.json so future PRs can track the
 perf trajectory.  The sparse path must grow sub-linearly in V; the dense
 path is vocab-bound.
+
+``--multips`` (or :func:`run_multips`) sweeps the multi-PS partition
+layer instead — V past 1e7 with n_ps in {1, 2, 4}, ps-aware cost + state
+update with per-shard counts — writing BENCH_multips.json; single-host V
+caps out around 1e7, so this is the curve that shows the partition layer
+unlocking larger vocabularies without losing the batch-bound step.
 """
 from __future__ import annotations
 
@@ -33,12 +39,14 @@ from repro.core import (
     cost_matrix_np,
     cost_matrix_sparse_jnp,
 )
+from repro.core import cost_matrix_sparse_ps_jnp
 from repro.core.dispatch_tpu import (
     esd_init,
     esd_sparse_init,
     esd_state_update,
     esd_state_update_sparse,
 )
+from repro.ps import make_partition
 
 RESULTS = Path(__file__).parent / "results"
 N, M, F = 8, 128, 26
@@ -144,7 +152,95 @@ def bench_numpy(V: int, reps: int) -> dict:
             "speedup": dense_ms / sparse_ms}
 
 
+def bench_multips(V: int, n_ps: int, reps: int, seed: int = 0) -> dict:
+    """One jitted multi-PS dispatch step (ps-aware Alg. 1 cost + sparse
+    state update with per-shard counts) at vocabulary V over n_ps
+    parameter servers.
+
+    Ids/planes live in the PS-linearized space; n_ps == 1 runs the same
+    ps code path through the identity partition, so the sweep isolates
+    the partition layer's overhead.  Capacity is fixed (a worker-memory
+    budget, not a V fraction) so the per-step work stays batch-bound and
+    the V axis measures exactly what must NOT grow: at V = 2e7 only the
+    state-plane *storage* is larger, not the step.
+    """
+    part = make_partition(V, n_ps)
+    rng = np.random.default_rng(seed)
+    k = N * M
+    Vs = part.linear_size
+    cap = 2 * M * F                       # fixed worker budget, V-independent
+    samples = rng.integers(0, V, (k, F)).astype(np.int64)
+    samples[rng.random((k, F)) < 0.1] = -1
+    lin = part.to_linear(samples).astype(np.int32)
+    ids_list = np.full((N, M * F), -1, np.int32)
+    for j in range(N):
+        ids = np.unique(lin[j * M:(j + 1) * M])
+        ids = ids[ids >= 0]
+        ids_list[j, :len(ids)] = ids
+    # float32 draws: at V = 2e7 a float64 (N, Vs) temporary is 1.28 GB
+    latest = rng.random((N, Vs), dtype=np.float32) > 0.6
+    dirty = (rng.random((N, Vs), dtype=np.float32) > 0.85) & latest
+    t_ps = (rng.random((N, n_ps)) * 1e-5 + 1e-6).astype(np.float32)
+
+    sj, lj, dj = jnp.asarray(lin), jnp.asarray(latest), jnp.asarray(dirty)
+    tj, idsj = jnp.asarray(t_ps), jnp.asarray(ids_list)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def ps_step(state, s, lat, dr, t, need):
+        C = cost_matrix_sparse_ps_jnp(s, lat, dr, t, part, linear=True)
+        state, counts = esd_state_update_sparse(state, need, cap, part)
+        return state, C, counts
+
+    state = esd_sparse_init(N, Vs, cap, M * F)
+    state, C, counts = ps_step(state, sj, lj, dj, tj, idsj)   # compile
+    C.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state, C, counts = ps_step(state, sj, lj, dj, tj, idsj)
+        C.block_until_ready()
+        counts["miss_pull_ps"].block_until_ready()
+    ms = (time.perf_counter() - t0) / reps * 1e3
+    return {"V": V, "n_ps": n_ps, "linear_size": Vs, "sparse_ms": ms}
+
+
+def run_multips(vocabs=None, ps_list=None, reps: int = 3,
+                out: Path | None = None) -> dict:
+    """Multi-PS scaling curve: V past 1e7 with n_ps in {1, 2, 4} —
+    writes benchmarks/results/BENCH_multips.json.  Sub-linearity check:
+    per-step time at the largest V must grow far slower than V itself
+    (batch-bound property preserved across the partition layer)."""
+    vocabs = vocabs or [2_000_000, 10_000_000, 20_000_000]
+    ps_list = ps_list or [1, 2, 4]
+    report = {"config": {"n": N, "m": M, "F": F, "capacity": 2 * M * F},
+              "results": []}
+    for V in vocabs:
+        for n_ps in ps_list:
+            r = bench_multips(V, n_ps, reps)
+            report["results"].append(r)
+            print(f"multips.V{V}.ps{n_ps},{r['sparse_ms'] * 1e3:.0f},"
+                  f"ms={r['sparse_ms']:.2f}")
+    # sub-linearity of the V axis at each n_ps (time ratio << V ratio)
+    v_lo, v_hi = min(vocabs), max(vocabs)
+    for n_ps in ps_list:
+        by_v = {r["V"]: r["sparse_ms"] for r in report["results"]
+                if r["n_ps"] == n_ps}
+        if v_lo != v_hi:
+            report.setdefault("sublinear", {})[str(n_ps)] = {
+                "v_ratio": v_hi / v_lo,
+                "time_ratio": by_v[v_hi] / by_v[v_lo],
+            }
+    out = out or RESULTS / "BENCH_multips.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    return report
+
+
 def run(quick: bool = False, out: Path | None = None) -> dict:
+    # quick runs land in a separate file so CI smoke never clobbers the
+    # tracked full-sweep perf-trajectory record
+    if out is None:
+        out = RESULTS / ("BENCH_dispatch_quick.json" if quick
+                         else "BENCH_dispatch.json")
     vocabs = [20_000] if quick else [20_000, 200_000, 1_000_000]
     report = {"config": {"n": N, "m": M, "F": F, "cache_ratio": CACHE_RATIO},
               "results": []}
@@ -159,12 +255,27 @@ def run(quick: bool = False, out: Path | None = None) -> dict:
         print(f"dispatch.V{V}.numpy,{npy['sparse_ms'] * 1e3:.0f},"
               f"dense_us={npy['dense_ms'] * 1e3:.0f},"
               f"speedup={npy['speedup']:.1f}x")
-    out = out or RESULTS / "BENCH_dispatch.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(report, indent=2))
     return report
 
 
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--multips", action="store_true",
+                    help="run the multi-PS V-sweep (BENCH_multips.json) "
+                         "instead of the dense-vs-sparse comparison")
+    ap.add_argument("--ps", default="1,2,4",
+                    help="comma list of n_ps values for --multips")
+    args = ap.parse_args()
+    if args.multips:
+        ps_list = [int(x) for x in args.ps.split(",")]
+        run_multips(vocabs=[200_000, 2_000_000] if args.quick else None,
+                    ps_list=ps_list,
+                    out=(RESULTS / "BENCH_multips_quick.json"
+                         if args.quick else None))
+    else:
+        run(quick=args.quick)

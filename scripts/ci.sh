@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# One-command verify recipe: tier-1 tests + kernel and dispatch benchmark
-# smoke.
+# One-command verify recipe: fast pre-test gate (compileall + quickstart
+# smoke), tier-1 tests, kernel and dispatch benchmark smoke.
 #
 #   scripts/ci.sh              # tier-1 (full suite, default selection) + bench smoke
 #   scripts/ci.sh --slow       # also run the @slow paper-scale tests
@@ -36,6 +36,14 @@ RUN_SLOW=0
 for arg in "$@"; do
   [ "$arg" = "--slow" ] && RUN_SLOW=1
 done
+
+# fast pre-test gate: import-time/syntax breakage fails in seconds, not
+# mid-suite — byte-compile every tree we ship, then one end-to-end
+# quickstart pass (exercises core cost/dispatch/cache on a real batch)
+t0=$SECONDS
+python -m compileall -q src benchmarks examples tests
+python examples/quickstart.py > /dev/null
+echo "pre-test gate (compileall + quickstart): $((SECONDS - t0))s"
 
 t0=$SECONDS
 env "${TEST_ENV[@]}" python -m pytest -q --durations=10

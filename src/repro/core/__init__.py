@@ -3,22 +3,28 @@ from .auction import auction_dispatch, auction_solve
 from .baselines import FAECache, HETCache, laia_dispatch, random_dispatch
 from .cache import ClusterCache, IterStats, SparseClusterCache
 from .cost import (
-    batch_unique_np, cost_from_state_cols, cost_matrix_jnp, cost_matrix_np,
-    cost_matrix_sparse, cost_matrix_sparse_jnp, dedup_mask_jnp, dedup_mask_np,
-    per_id_cost_rows, transmission_time,
+    batch_unique_np, cost_from_state_cols, cost_from_state_cols_ps,
+    cost_matrix_jnp, cost_matrix_np, cost_matrix_sparse,
+    cost_matrix_sparse_jnp, cost_matrix_sparse_ps, cost_matrix_sparse_ps_jnp,
+    dedup_mask_jnp, dedup_mask_np, per_id_cost_rows, per_id_cost_rows_ps,
+    transmission_time,
 )
 from .heu import heu_dispatch, min2_minus_min
 from .hungarian import assignment_cost, expand_capacity, hungarian, hungarian_dispatch
 from .hybrid import hybrid_dispatch
-from .simulator import DEFAULT_BANDWIDTHS, SimConfig, SimResult, simulate
+from .simulator import (DEFAULT_BANDWIDTHS, SimConfig, SimResult,
+                        hetero_ps_bandwidths, simulate)
 
 __all__ = [
     "auction_dispatch", "auction_solve", "FAECache", "HETCache",
     "laia_dispatch", "random_dispatch", "ClusterCache", "SparseClusterCache",
     "IterStats", "cost_matrix_jnp", "cost_matrix_np", "cost_matrix_sparse",
     "cost_matrix_sparse_jnp", "batch_unique_np", "cost_from_state_cols",
+    "cost_from_state_cols_ps", "cost_matrix_sparse_ps",
+    "cost_matrix_sparse_ps_jnp", "per_id_cost_rows_ps",
     "dedup_mask_jnp", "dedup_mask_np", "per_id_cost_rows",
     "transmission_time", "heu_dispatch", "min2_minus_min",
     "assignment_cost", "expand_capacity", "hungarian", "hungarian_dispatch",
-    "hybrid_dispatch", "DEFAULT_BANDWIDTHS", "SimConfig", "SimResult", "simulate",
+    "hybrid_dispatch", "DEFAULT_BANDWIDTHS", "SimConfig", "SimResult",
+    "simulate", "hetero_ps_bandwidths",
 ]

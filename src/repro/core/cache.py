@@ -30,6 +30,12 @@ Two engines:
     touches, and eviction scans the bounded resident set (<= capacity)
     instead of all V.  At paper scale (V = 1e6) this is the difference
     between vocab-bound and batch-bound simulation.
+
+Multi-PS: built with ``part=`` (a :class:`repro.ps.PsPartition`), a cache
+runs on the PS-linearized id space (vocab == part.linear_size) and every
+transmission op is additionally counted against the owning shard's link
+(``IterStats.*_ps``), so the simulator can charge per-(worker, PS)
+bandwidths.  ``part=None`` is the unchanged single-PS reference path.
 """
 from __future__ import annotations
 
@@ -45,13 +51,22 @@ Policy = Literal["emark", "lru", "lfu"]
 
 @dataclasses.dataclass
 class IterStats:
-    """Per-iteration transmission counts, per worker."""
+    """Per-iteration transmission counts, per worker.
+
+    The ``*_ps`` fields are the per-(worker, parameter-server) breakdown,
+    populated only when the cache was built with a ``part``
+    (:class:`repro.ps.PsPartition`); each row sums to the per-worker
+    count.
+    """
 
     miss_pull: np.ndarray     # (n,)
     update_push: np.ndarray   # (n,)
     evict_push: np.ndarray    # (n,)
     lookups: np.ndarray       # (n,) embedding lookups (for hit ratio)
     hits: np.ndarray          # (n,)
+    miss_pull_ps: np.ndarray | None = None     # (n, n_ps)
+    update_push_ps: np.ndarray | None = None   # (n, n_ps)
+    evict_push_ps: np.ndarray | None = None    # (n, n_ps)
 
     def cost(self, t_tran: np.ndarray) -> float:
         ops = self.miss_pull + self.update_push + self.evict_push
@@ -59,6 +74,18 @@ class IterStats:
 
     def per_worker_cost(self, t_tran: np.ndarray) -> np.ndarray:
         return (self.miss_pull + self.update_push + self.evict_push) * t_tran
+
+    def _ops_ps(self) -> np.ndarray:
+        return self.miss_pull_ps + self.update_push_ps + self.evict_push_ps
+
+    def cost_ps(self, t_ps: np.ndarray) -> float:
+        """Total transmission cost under per-(worker, PS) link times."""
+        return float((self._ops_ps() * t_ps).sum())
+
+    def per_worker_time_ps(self, t_ps: np.ndarray) -> np.ndarray:
+        """Per-worker wall time: PS links transfer in parallel, so the
+        worker waits on its slowest shard, not the sum."""
+        return (self._ops_ps() * t_ps).max(axis=1)
 
 
 class ClusterCache:
@@ -72,6 +99,7 @@ class ClusterCache:
         policy: Policy = "emark",
         sync: Literal["on_demand", "eager"] = "on_demand",
         seed: int = 0,
+        part=None,
     ):
         self.n = n_workers
         self.V = vocab
@@ -79,6 +107,14 @@ class ClusterCache:
         self.policy: Policy = policy
         self.sync = sync   # "eager": push every dirty entry each iteration
                            # (HET-under-BSP per the paper's evaluation setup)
+        # multi-PS accounting: when a PsPartition is attached, ids (and
+        # vocab) are in its PS-linearized space and every op is also
+        # counted against the owning shard's link (IterStats.*_ps).
+        self.part = part
+        if part is not None and part.n_ps > 1 and vocab != part.linear_size:
+            raise ValueError(
+                f"vocab {vocab} != part.linear_size {part.linear_size}: "
+                "multi-PS caches run on the PS-linearized id space")
         self.present = np.zeros((self.n, vocab), bool)
         self.latest = np.zeros((self.n, vocab), bool)
         self.dirty = np.zeros((self.n, vocab), bool)
@@ -121,6 +157,7 @@ class ClusterCache:
             lookups=need.sum(axis=1).astype(np.int64),
             hits=np.zeros(n, np.int64),
         )
+        self._init_ps_stats(stats)
 
         # ---- Phase A: update push ------------------------------------------
         need_any = need.any(axis=0)                      # (V,)
@@ -132,6 +169,10 @@ class ClusterCache:
         else:
             pushers = self.dirty & need_other            # (n, V) on-demand
         stats.update_push += pushers.sum(axis=1)
+        if self.part is not None:
+            # V == n_ps * max_rows: columns group by shard contiguously
+            stats.update_push_ps += pushers.reshape(
+                n, self.part.n_ps, -1).sum(axis=2)
         pushed = pushers.any(axis=0)                     # (V,)
         multi = pushers.sum(axis=0) > 1
         # after a push the PS holds the newest value: every non-pushing copy
@@ -152,6 +193,8 @@ class ClusterCache:
             have = self.present[j, ids] & self.latest[j, ids]
             miss_ids = ids[~have]
             stats.miss_pull[j] += len(miss_ids)
+            if self.part is not None:
+                stats.miss_pull_ps[j] += self._ps_count(miss_ids)
             # refresh stale-resident entries in place (no eviction needed)
             resident_stale = miss_ids[self.present[j, miss_ids]]
             self.latest[j, resident_stale] = True
@@ -163,6 +206,8 @@ class ClusterCache:
                     victims = self._pick_victims(j, need[j], overflow)
                     vdirty = victims[self.dirty[j, victims]]
                     stats.evict_push[j] += len(vdirty)
+                    if self.part is not None:
+                        stats.evict_push_ps[j] += self._ps_count(vdirty)
                     if len(vdirty):
                         # evict-push publishes new versions: other copies stale
                         self.dirty[j, vdirty] = False
@@ -187,6 +232,20 @@ class ClusterCache:
         trained = need.any(axis=0)
         self.latest &= ~(trained[None, :] & ~need)
         return stats
+
+    # -- multi-PS accounting helpers -----------------------------------------
+    def _init_ps_stats(self, stats: IterStats):
+        if self.part is not None:
+            shape = (self.n, self.part.n_ps)
+            stats.miss_pull_ps = np.zeros(shape, np.int64)
+            stats.update_push_ps = np.zeros(shape, np.int64)
+            stats.evict_push_ps = np.zeros(shape, np.int64)
+
+    def _ps_count(self, ids) -> np.ndarray:
+        """(n_ps,) op count per owning shard for linear-space ``ids``."""
+        return np.bincount(
+            self.part.shard_of_linear(np.asarray(ids, np.int64)),
+            minlength=self.part.n_ps).astype(np.int64)
 
     # -- eviction ------------------------------------------------------------
     def _pick_victims(self, j: int, pinned: np.ndarray, count: int) -> np.ndarray:
@@ -283,6 +342,7 @@ class SparseClusterCache(ClusterCache):
             lookups=np.array([len(b) for b in batches], np.int64),
             hits=np.zeros(n, np.int64),
         )
+        self._init_ps_stats(stats)
         if U == 0:
             return stats
 
@@ -296,6 +356,11 @@ class SparseClusterCache(ClusterCache):
         need_other = need_any[None, :] & ~sole
         pushers = dirU.copy() if self.sync == "eager" else dirU & need_other
         stats.update_push += pushers.sum(axis=1)
+        if self.part is not None:
+            shard_t = self.part.shard_of_linear(touched)
+            for j in range(n):
+                stats.update_push_ps[j] += np.bincount(
+                    shard_t[pushers[j]], minlength=self.part.n_ps)
         pushed = pushers.any(axis=0)
         multi = pushers.sum(axis=0) > 1
         latU &= ~(pushed[None, :] & ~pushers) & ~multi[None, :]
@@ -317,6 +382,8 @@ class SparseClusterCache(ClusterCache):
             have = self.present[j, ids] & self.latest[j, ids]
             miss_ids = ids[~have]
             stats.miss_pull[j] += len(miss_ids)
+            if self.part is not None:
+                stats.miss_pull_ps[j] += self._ps_count(miss_ids)
             resident_stale = miss_ids[self.present[j, miss_ids]]
             self.latest[j, resident_stale] = True
             new_ids = miss_ids[~self.present[j, miss_ids]]
@@ -327,6 +394,8 @@ class SparseClusterCache(ClusterCache):
                     victims = self._pick_victims_sparse(j, ids, overflow)
                     vdirty = victims[self.dirty[j, victims]]
                     stats.evict_push[j] += len(vdirty)
+                    if self.part is not None:
+                        stats.evict_push_ps[j] += self._ps_count(vdirty)
                     if len(vdirty):
                         self.dirty[j, vdirty] = False
                         self._dirtyset[j].difference_update(vdirty.tolist())

@@ -23,6 +23,13 @@ then  C[i, :] = sum_{x in E_i} v[x, :]  — i.e. the Alg. 1 matrix is a pooled
 embedding lookup with "embedding dim" n.  That is what lets the same Pallas
 gather-sum kernel serve both the model's sparse features and ESD itself.
 
+Multi-PS: the ``*_ps`` variants generalize the per-worker scalar T_j to a
+per-(worker, parameter-server) matrix ``t_tran[n, n_ps]`` — a miss/push on
+id x costs the bandwidth of the link to x's *owning* shard
+(``repro.ps.PsPartition``), which is what changes dispatch decisions under
+heterogeneous PS links.  With ``n_ps == 1`` (or a column-constant matrix)
+they reduce to the single-PS functions; the n_ps=1 reduction is bitwise.
+
 Dense vs sparse crossover: the dense paths do O(V*n) work per iteration
 (materializing the (V, n) table, or gathering against full planes), while
 the sparse paths do O(k*F*n) — independent of the vocabulary.  A batch
@@ -41,6 +48,8 @@ __all__ = [
     "transmission_time", "cost_matrix_np", "per_id_cost_rows",
     "cost_matrix_jnp", "dedup_mask_np", "dedup_mask_jnp", "batch_unique_np",
     "cost_from_state_cols", "cost_matrix_sparse", "cost_matrix_sparse_jnp",
+    "per_id_cost_rows_ps", "cost_from_state_cols_ps", "cost_matrix_sparse_ps",
+    "cost_matrix_sparse_ps_jnp",
 ]
 
 PAD_ID = -1  # padding slot inside a sample's id list
@@ -244,5 +253,118 @@ def cost_matrix_sparse_jnp(
     dirty_g = dirty[:, ids].reshape(n, k * F)
     rows = per_id_cost_rows(lat_g, dirty_g,
                             t_tran.astype(jnp.float32)).reshape(k, F, n)
+    rows = jnp.where(valid[:, :, None], rows, 0.0)
+    return rows.sum(axis=1)
+
+
+# --------------------------------------------------------------------------
+# multi-PS paths — per-(worker, shard) bandwidth, O(k*F*n) like the sparse
+# --------------------------------------------------------------------------
+def _cost_from_gathers_ps(latest_g: np.ndarray, dirty_g: np.ndarray,
+                          valid: np.ndarray, t_ps: np.ndarray,
+                          shard_g: np.ndarray) -> np.ndarray:
+    """Alg. 1 arithmetic with per-shard link costs.
+
+    latest_g/dirty_g: (n, k, F) gathered state; t_ps: (n, n_ps); shard_g:
+    (k, F) owning shard per slot.  The miss term counts misses per shard
+    (integer) before weighting, and the push term weights elementwise, so
+    with n_ps == 1 every float op matches :func:`_cost_from_gathers`
+    bitwise.
+    """
+    n_ps = t_ps.shape[1]
+    onehot = (shard_g[..., None] == np.arange(n_ps)).astype(np.int64)  # (k,F,p)
+    # miss pull: count per (worker, sample, shard), weight by the shard link
+    miss = ((~latest_g) & valid[None, :, :]).astype(np.int64)     # (n, k, F)
+    miss_ps = np.einsum("nkf,kfp->nkp", miss, onehot)
+    miss_cost = (miss_ps * t_ps[:, None, :]).sum(axis=2).T        # (k, n)
+
+    # update push: each dirty holder pushes over ITS link to the owning PS
+    t_g = t_ps[:, shard_g]                                        # (n, k, F)
+    push_any = (dirty_g * t_g).sum(axis=0)                        # (k, F)
+    push_any = np.where(valid, push_any, 0.0)
+    self_push = np.where(valid[None], dirty_g * t_g, 0.0)
+    push_cost = push_any.sum(axis=1)[:, None] - self_push.sum(axis=2).T
+    return miss_cost + push_cost
+
+
+def cost_from_state_cols_ps(inv: np.ndarray, mask: np.ndarray,
+                            lat_cols: np.ndarray, dirty_cols: np.ndarray,
+                            t_ps: np.ndarray,
+                            shard_cols: np.ndarray) -> np.ndarray:
+    """(k, n) multi-PS Alg. 1 from state gathered at the batch's unique ids.
+
+    Same contract as :func:`cost_from_state_cols` plus ``t_ps`` (n, n_ps)
+    and ``shard_cols`` (U,) — the owning shard of each unique id (from
+    ``PsPartition.shard_of`` / ``shard_of_linear``).
+    """
+    n = lat_cols.shape[0]
+    if lat_cols.shape[1] == 0:
+        return np.zeros((inv.shape[0], n), np.float64)
+    return _cost_from_gathers_ps(lat_cols[:, inv], dirty_cols[:, inv],
+                                 mask, t_ps, shard_cols[inv])
+
+
+def cost_matrix_sparse_ps(
+    samples: np.ndarray,
+    latest_in_cache: np.ndarray,
+    dirty: np.ndarray,
+    t_ps: np.ndarray,
+    part,
+    linear: bool = False,
+) -> np.ndarray:
+    """Touched-ids multi-PS Alg. 1 (numpy).
+
+    ``part`` is a :class:`repro.ps.PsPartition`; ``linear=True`` means
+    samples (and the state-plane columns) are already PS-linearized.  With
+    ``part.n_ps == 1`` this is bitwise-equal to :func:`cost_matrix_sparse`
+    at ``t_ps[:, 0]``.
+    """
+    ids, mask, uids, inv = batch_unique_np(samples)
+    shard_u = (part.shard_of_linear(uids) if linear else part.shard_of(uids))
+    return cost_from_state_cols_ps(inv, mask, latest_in_cache[:, uids],
+                                   dirty[:, uids], t_ps, shard_u)
+
+
+def per_id_cost_rows_ps(
+    latest_cols: jnp.ndarray,
+    dirty_cols: jnp.ndarray,
+    t_cols: jnp.ndarray,
+) -> jnp.ndarray:
+    """Per-id cost rows with a per-(worker, id) link cost ``t_cols`` (n, U):
+
+    v[x, j] = (1 - latest[j, x]) * t_cols[j, x]
+              + sum_{j' != j} dirty[j', x] * t_cols[j', x]
+
+    where ``t_cols[j, x] = t_ps[j, shard_of(x)]``.  With column-constant
+    t_cols this performs the exact float ops of :func:`per_id_cost_rows`.
+    """
+    miss = (1.0 - latest_cols.astype(jnp.float32)).T * t_cols.T      # (U, n)
+    push_tot = (dirty_cols.astype(jnp.float32) * t_cols).sum(axis=0)  # (U,)
+    push = push_tot[:, None] - dirty_cols.astype(jnp.float32).T * t_cols.T
+    return miss + push
+
+
+def cost_matrix_sparse_ps_jnp(
+    samples: jnp.ndarray,
+    latest_in_cache: jnp.ndarray,
+    dirty: jnp.ndarray,
+    t_ps: jnp.ndarray,
+    part,
+    linear: bool = False,
+) -> jnp.ndarray:
+    """Touched-ids multi-PS Alg. 1 (jnp, jit friendly).
+
+    ``part`` must be closed over / static (pure-arithmetic translations).
+    With ``part.n_ps == 1`` this is bitwise-equal to
+    :func:`cost_matrix_sparse_jnp` at ``t_ps[:, 0]``.
+    """
+    k, F = samples.shape
+    n = latest_in_cache.shape[0]
+    ids, valid = dedup_mask_jnp(samples)
+    shard = (part.shard_of_linear(ids) if linear else part.shard_of(ids))
+    lat_g = latest_in_cache[:, ids].reshape(n, k * F)
+    dirty_g = dirty[:, ids].reshape(n, k * F)
+    t_cols = t_ps.astype(jnp.float32)[:, shard.reshape(-1)]       # (n, k*F)
+    rows = per_id_cost_rows_ps(lat_g, dirty_g, t_cols).reshape(k, F, n)
     rows = jnp.where(valid[:, :, None], rows, 0.0)
     return rows.sum(axis=1)

@@ -35,6 +35,16 @@ Everything here is jit-compatible (runs inside the train step):
 Dense-vs-sparse crossover: like core.cost, the dense engine only wins for
 toy vocabularies (V below a few thousand); everything paper-scale should
 run the sparse engine.
+
+Multi-PS (repro.ps): ids are translated once to the PS-linearized space
+(``PsPartition.to_linear``: lin = shard * max_rows + local) and the sparse
+engine runs unchanged on planes of width ``part.linear_size`` — segment
+``[p*max_rows, (p+1)*max_rows)`` is the set of rows PS ``p`` tracks.
+``esd_dispatch(part=...)`` costs misses/pushes at the owning shard's link
+(t_tran becomes (n, n_ps)), ``esd_state_update_sparse(part=...)`` emits a
+per-(worker, PS) op breakdown, and :func:`need_ids_local` projects the
+padded need lists to per-PS local rows.  ``n_ps == 1`` is the identity
+translation, so the single-PS path is bit-for-bit unchanged.
 """
 from __future__ import annotations
 
@@ -47,12 +57,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .auction import _repair, _round_body
-from .cost import cost_matrix_jnp, cost_matrix_sparse_jnp
+from .cost import (cost_matrix_jnp, cost_matrix_sparse_jnp,
+                   cost_matrix_sparse_ps_jnp)
 
 __all__ = ["EsdState", "esd_init", "esd_dispatch", "esd_state_update",
            "SparseEsdState", "esd_sparse_init", "esd_state_update_sparse",
-           "need_ids_list", "heu_dispatch_jax", "auction_fixed",
-           "hybrid_dispatch_jax"]
+           "need_ids_list", "need_ids_local", "heu_dispatch_jax",
+           "auction_fixed", "hybrid_dispatch_jax"]
 
 
 # --------------------------------------------------------------------------
@@ -274,16 +285,26 @@ def esd_sparse_init(n_workers: int, vocab: int, capacity: Optional[int] = None,
 
 
 def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
-                            capacity: Optional[int] = None):
+                            capacity: Optional[int] = None, part=None):
     """Incremental BSP iteration: same protocol and counts as
     :func:`esd_state_update`, driven by touched ids only.
 
     need_ids: (n, L) int32 — the ids each worker trains this iteration,
     **unique within each row**, PAD = -1 (see :func:`need_ids_list`).
     Returns (new_state, counts).
+
+    With ``part`` (a static :class:`repro.ps.PsPartition`; ids and planes
+    in its PS-linearized space) the counts dict additionally carries the
+    per-(worker, PS) breakdown ``{miss_pull,update_push,evict_push}_ps``
+    of shape (n, n_ps), so the caller can charge per-shard link costs.
+    The state transition itself is unchanged.
     """
     n, L = need_ids.shape
     V = state.latest.shape[1]
+    if part is not None and V != part.linear_size:
+        raise ValueError(
+            f"state plane width {V} != part.linear_size {part.linear_size}: "
+            "multi-PS state runs on the PS-linearized id space")
     step = state.step + 1
     valid = need_ids >= 0
 
@@ -343,6 +364,8 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
     # zone right below the top-capacity block — no argsort, no
     # candidate-wide scatters.
     evict_push = jnp.zeros((n,), jnp.int32)
+    evict_push_ps = (jnp.zeros((n, part.n_ps), jnp.int32)
+                     if part is not None else None)
     slots = state.slots
     if capacity is not None and capacity < V:
         if slots.shape[1] < capacity + L:
@@ -381,6 +404,14 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
         lat_e = latest[rows, egc] & ev
         dr_e = dirty[rows, egc] & ev
         evict_push = (lat_e & dr_e).sum(axis=1).astype(jnp.int32)
+        if part is not None:
+            # non-evicted slots (shard of the sentinel V is out of range
+            # for n_ps > 1) are already masked out by lat_e/dr_e
+            shard_e = part.shard_of_linear(ev_ids)
+            evict_push_ps = ((lat_e & dr_e)[:, :, None]
+                             & (shard_e[:, :, None]
+                                == jnp.arange(part.n_ps)[None, None, :])
+                             ).sum(axis=1).astype(jnp.int32)
         latest = latest.at[rows, ev_ids].set(False, mode="drop")
         dirty = dirty.at[rows, ev_ids].set(False, mode="drop")
 
@@ -394,6 +425,14 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
     new = SparseEsdState(latest, dirty, last_access, slots, step)
     counts = {"miss_pull": miss_pull, "update_push": update_push,
               "evict_push": evict_push}
+    if part is not None:
+        # per-shard breakdown on the touched universe; sentinel columns
+        # never hold a set miss/pusher bit, so their shard is irrelevant
+        onehot = part.shard_of_linear(uids)[:, None] == jnp.arange(part.n_ps)
+        onehot = onehot.astype(jnp.int32)                          # (U, p)
+        counts["miss_pull_ps"] = miss.astype(jnp.int32) @ onehot
+        counts["update_push_ps"] = pushers.astype(jnp.int32) @ onehot
+        counts["evict_push_ps"] = evict_push_ps
     return new, counts
 
 
@@ -402,7 +441,7 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
 # --------------------------------------------------------------------------
 def esd_dispatch(samples, state, t_tran, alpha: float,
                  axis_name: str = "data", use_pallas: bool = False,
-                 sparse_cost: bool = True):
+                 sparse_cost: bool = True, part=None):
     """Inside shard_map over ``axis_name``: dispatch this shard's samples.
 
     samples: (m, F) local ids.  Returns (exchanged_samples (m, F), assign).
@@ -412,12 +451,23 @@ def esd_dispatch(samples, state, t_tran, alpha: float,
     ``sparse_cost`` selects the touched-ids Alg. 1 path (O(m*F*n), the
     default) over the dense (V, n)-table path; both are equivalence-tested.
     With ``use_pallas`` the corresponding Pallas kernel variant is used.
+
+    Multi-PS: pass ``part`` (a static :class:`repro.ps.PsPartition` with
+    ``n_ps > 1``) plus a per-(worker, PS) ``t_tran`` of shape (n, n_ps);
+    samples and the state planes must then be in the PS-linearized space,
+    and a miss/push on an id is costed at the owning shard's link.
     """
     m, F = samples.shape
     # constant-folds to the static mesh axis size at trace time
     # (jax.lax.axis_size is not available on this jax version)
     n = jax.lax.psum(1, axis_name)
-    if use_pallas:
+    if part is not None and part.n_ps > 1:
+        if use_pallas:
+            raise NotImplementedError(
+                "multi-PS Alg. 1 has no Pallas variant yet (jnp only)")
+        C = cost_matrix_sparse_ps_jnp(samples, state.latest, state.dirty,
+                                      t_tran, part, linear=True)
+    elif use_pallas:
         from ..kernels.ops import cost_matrix_pallas, cost_matrix_pallas_sparse
         kern = cost_matrix_pallas_sparse if sparse_cost else cost_matrix_pallas
         C = kern(samples, state.latest, state.dirty, t_tran)
@@ -448,3 +498,20 @@ def need_ids_list(local_samples, axis_name: str):
                    size=flat.shape[0], fill_value=imax)
     mine = jnp.where(u == imax, -1, u).astype(jnp.int32)
     return jax.lax.all_gather(mine, axis_name)           # (n, L)
+
+
+def need_ids_local(need_ids, part):
+    """(n_ps, n, L) per-PS **local-row** need lists from a PS-linearized
+    (n, L) ``need_ids`` (PAD = -1): row ``[p, j]`` holds the local rows of
+    shard ``p`` that worker ``j`` needs — exactly the pull/push list each
+    parameter server receives, so a PS only ever addresses its own rows.
+    Rows stay sorted-unique with PAD = -1, like :func:`need_ids_list`."""
+    imax = jnp.iinfo(jnp.int32).max
+    shard = part.shard_of_linear(need_ids)
+    local = need_ids - shard * part.max_rows             # valid slots only
+    out = []
+    for p in range(part.n_ps):
+        vals = jnp.where((need_ids >= 0) & (shard == p), local, imax)
+        vals = jnp.sort(vals, axis=1)
+        out.append(jnp.where(vals == imax, -1, vals))
+    return jnp.stack(out).astype(jnp.int32)              # (n_ps, n, L)

@@ -24,6 +24,18 @@ incremental SparseClusterCache — making each iteration O(k*F) instead of
 O(n*V), so paper-scale vocabularies (V = 1e6, n = 16) simulate in
 seconds.  ``engine="dense"`` keeps the original full-plane reference path
 (equivalence-tested: identical assignments, counts, and costs).
+
+Multi-PS (``n_ps > 1`` or ``ps_bandwidths`` set): the embedding space is
+partitioned over n_ps parameter servers (``repro.ps.PsPartition``,
+``ps_layout`` contiguous|hashed), every transmission op is charged at the
+owning shard's link (``ps_bandwidths[j, p]``), and a worker's
+per-iteration comm time is the max over the shards it touched (links
+transfer in parallel).  ``hetero_ps_bandwidths`` builds the skewed-links
+scenario (one slow PS, rest fast) the paper's heterogeneous-network
+experiments correspond to.  Supported for the esd/laia/random mechanisms
+and het-under-BSP (the version-tracked caches); FAE and stale-HET have
+no per-PS accounting in their cache models, so those combinations are
+rejected with a ValueError (see ROADMAP).
 """
 from __future__ import annotations
 
@@ -34,13 +46,16 @@ from typing import Literal
 import numpy as np
 
 from ..data.synthetic import CTRWorkload
+from ..ps import make_partition
 from .baselines import FAECache, HETCache, laia_dispatch, random_dispatch
 from .cache import ClusterCache, IterStats, SparseClusterCache
-from .cost import (batch_unique_np, cost_from_state_cols, cost_matrix_np,
+from .cost import (batch_unique_np, cost_from_state_cols,
+                   cost_from_state_cols_ps, cost_matrix_np,
                    transmission_time)
 from .hybrid import hybrid_dispatch
 
-__all__ = ["SimConfig", "SimResult", "simulate", "DEFAULT_BANDWIDTHS"]
+__all__ = ["SimConfig", "SimResult", "simulate", "DEFAULT_BANDWIDTHS",
+           "hetero_ps_bandwidths"]
 
 GBPS = 1e9 / 8  # bytes per second per Gbps
 
@@ -48,6 +63,17 @@ GBPS = 1e9 / 8  # bytes per second per Gbps
 def DEFAULT_BANDWIDTHS(n: int) -> np.ndarray:
     """Paper default: half the workers on 5 Gbps, half on 0.5 Gbps."""
     return np.array([5.0 * GBPS] * (n // 2) + [0.5 * GBPS] * (n - n // 2))
+
+
+def hetero_ps_bandwidths(n: int, n_ps: int, fast_gbps: float = 5.0,
+                         slow_gbps: float = 0.5) -> np.ndarray:
+    """Heterogeneous-PS preset: every worker reaches the last PS over a
+    slow link and the rest over fast links — (n, n_ps) bytes/s.  The
+    skewed-links scenario where cost-aware dispatch should shine: ids
+    homed on the slow shard are 10x more expensive to miss."""
+    bw = np.full((n, n_ps), fast_gbps * GBPS)
+    bw[:, -1] = slow_gbps * GBPS
+    return bw
 
 
 @dataclasses.dataclass
@@ -70,6 +96,12 @@ class SimConfig:
     het_staleness: int = 0               # BSP default: staleness tolerance off
     decision_model: Literal["measured", "calibrated"] = "calibrated"
     engine: Literal["sparse", "dense"] = "sparse"   # cost/cache engine
+    # multi-PS: partition the V-space over n_ps parameter servers; links
+    # become per-(worker, shard).  ps_bandwidths (n, n_ps) bytes/s — None
+    # with n_ps > 1 means every shard shares the worker's default link.
+    n_ps: int = 1
+    ps_layout: Literal["contiguous", "hashed"] = "contiguous"
+    ps_bandwidths: np.ndarray | None = None
 
     @property
     def d_tran(self) -> float:
@@ -117,20 +149,22 @@ class SimResult:
         }
 
 
-def _make_cache(cfg: SimConfig, hot_ids: np.ndarray):
+def _make_cache(cfg: SimConfig, hot_ids: np.ndarray, vocab: int | None = None,
+                part=None):
     cap = int(cfg.cache_ratio * cfg.workload.vocab)
+    vocab = cfg.workload.vocab if vocab is None else vocab
     cls = SparseClusterCache if cfg.engine == "sparse" else ClusterCache
     if cfg.mechanism == "het":
         if cfg.het_staleness <= 0:
             # HET under BSP (the paper's setup): version-tracked cache with
             # eager full-set sync -- no staleness advantage available.
-            return cls(cfg.n_workers, cfg.workload.vocab, cap,
-                       policy="lru", sync="eager")
-        return HETCache(cfg.n_workers, cfg.workload.vocab, cap,
+            return cls(cfg.n_workers, vocab, cap,
+                       policy="lru", sync="eager", part=part)
+        return HETCache(cfg.n_workers, vocab, cap,
                         policy="lru", staleness=cfg.het_staleness)
     if cfg.mechanism == "fae":
-        return FAECache(cfg.n_workers, cfg.workload.vocab, cap, hot_ids)
-    return cls(cfg.n_workers, cfg.workload.vocab, cap, policy=cfg.policy)
+        return FAECache(cfg.n_workers, vocab, cap, hot_ids)
+    return cls(cfg.n_workers, vocab, cap, policy=cfg.policy, part=part)
 
 
 def _worker_batches(samples: np.ndarray, assign: np.ndarray, n: int,
@@ -153,12 +187,39 @@ def simulate(cfg: SimConfig) -> SimResult:
     t_tran = transmission_time(cfg.d_tran, bw)
     rng = np.random.default_rng(cfg.seed)
 
-    # offline popularity profile (for FAE's static hot set)
-    profile = cfg.workload.sample_batch(np.random.default_rng(123), 20_000).ravel()
-    profile = profile[profile >= 0]
-    hot_ids = np.argsort(-np.bincount(profile, minlength=cfg.workload.vocab))
+    # multi-PS: partition the V-space, run caches/ids in the PS-linearized
+    # space, and charge ops at the owning shard's link
+    use_ps = cfg.n_ps > 1 or cfg.ps_bandwidths is not None
+    part = t_ps = None
+    vocab = cfg.workload.vocab
+    if use_ps:
+        if cfg.mechanism == "fae" or (cfg.mechanism == "het"
+                                      and cfg.het_staleness > 0):
+            raise ValueError(
+                f"multi-PS accounting is not supported for "
+                f"mechanism={cfg.mechanism!r} (single-PS cache model)")
+        part = make_partition(cfg.workload.vocab, cfg.n_ps, cfg.ps_layout)
+        bw_ps = (np.asarray(cfg.ps_bandwidths, np.float64)
+                 if cfg.ps_bandwidths is not None
+                 else np.repeat(np.asarray(bw, np.float64)[:, None],
+                                part.n_ps, axis=1))
+        if bw_ps.shape != (n, part.n_ps):
+            raise ValueError(f"ps_bandwidths shape {bw_ps.shape} != "
+                             f"({n}, {part.n_ps})")
+        t_ps = transmission_time(cfg.d_tran, bw_ps)        # (n, n_ps)
+        vocab = part.linear_size
 
-    cache = _make_cache(cfg, hot_ids)
+    # offline popularity profile (for FAE's static hot set) — only FAE
+    # reads it, and the bincount/argsort are vocab-bound work the other
+    # mechanisms (esd at V >= 2e7 especially) must not pay
+    hot_ids = None
+    if cfg.mechanism == "fae":
+        profile = cfg.workload.sample_batch(
+            np.random.default_rng(123), 20_000).ravel()
+        profile = profile[profile >= 0]
+        hot_ids = np.argsort(-np.bincount(profile, minlength=cfg.workload.vocab))
+
+    cache = _make_cache(cfg, hot_ids, vocab=vocab, part=part)
     stream = cfg.workload.stream(cfg.seed + 1, k)
 
     per_iter_cost, per_iter_time, dec_times = [], [], []
@@ -171,10 +232,19 @@ def simulate(cfg: SimConfig) -> SimResult:
 
     for it in range(cfg.iters):
         samples, _, _ = next(stream)
+        if use_ps:
+            samples = part.to_linear(samples)
 
         t0 = time.perf_counter()
         if cfg.mechanism == "esd":
-            if cfg.engine == "sparse":
+            if use_ps:
+                # per-shard link costs: gather state columns at the unique
+                # (linearized) ids and weight by the owning PS's t
+                ids_, mask, uids, inv = batch_unique_np(samples)
+                latU, dirU = cache.state_columns(uids)
+                C = cost_from_state_cols_ps(inv, mask, latU, dirU, t_ps,
+                                            part.shard_of_linear(uids))
+            elif cfg.engine == "sparse":
                 # touched-ids Alg. 1: gather state columns for the batch's
                 # unique ids only — no dense snapshot, no O(n*V) work
                 ids_, mask, uids, inv = batch_unique_np(samples)
@@ -194,11 +264,17 @@ def simulate(cfg: SimConfig) -> SimResult:
             dec_t = (calibrated_decision_time(m, cfg.alpha)
                      if cfg.mechanism == "esd" else 1e-3)
 
-        batches = _worker_batches(samples, assign, n, cfg.workload.vocab)
+        batches = _worker_batches(samples, assign, n, vocab)
         stats: IterStats = cache.step(batches)
 
-        cost = stats.cost(t_tran)
-        comm = stats.per_worker_cost(t_tran)
+        if use_ps:
+            # cost = total traffic over every (worker, PS) link; a worker's
+            # wall time is its slowest link (shards transfer in parallel)
+            cost = stats.cost_ps(t_ps)
+            comm = stats.per_worker_time_ps(t_ps)
+        else:
+            cost = stats.cost(t_tran)
+            comm = stats.per_worker_cost(t_tran)
         iter_time = max(cfg.compute_time_s + comm.max(), dec_t)
 
         if it >= cfg.warmup:

@@ -2,9 +2,12 @@
 in-model sharding constraints, MoE dispatch knobs) and the PartitionSpec
 rule engine for params / optimizer state / batches / decode caches.
 
-This is the spec layer under the ROADMAP's multi-PS embedding-table
-sharding: the DLRM table's PS-row placement and the LM tensor-parallel
-placements both come out of ``sharding.param_specs``.
+This is the spec layer under the multi-PS embedding-table sharding: the
+DLRM table's PS-row placement (flat (V, E), or PS-stacked
+(n_ps, max_rows, E) in the ``repro.ps`` (shard, local_row) convention)
+and the LM tensor-parallel placements both come out of
+``sharding.param_specs``; the V-space index translation itself lives in
+``repro.ps.PsPartition``.
 """
 from . import ctx, sharding
 from .sharding import (

@@ -113,8 +113,32 @@ def _dlrm_rules() -> dict[str, tuple]:
     """PS-style DLRM placement: the (V, E) global embedding table (and the
     wide (V, 1) term) row-sharded over the data axis — each worker holds a
     V/n slice, exactly the per-worker cache plane the ESD engine manages —
-    while the interaction/MLP stack is replicated."""
+    while the interaction/MLP stack is replicated.
+
+    repro.ps addressing: under multi-PS training the table arrives
+    PS-stacked as (n_ps, max_rows, E) — ``repro.ps.PsPartition`` maps a
+    global id to ``(ps_shard, local_row)`` and the row block ``[p]`` is
+    exactly the rows parameter server ``p`` owns (lookups index the
+    flattened table at the PS-linearized id ``p * max_rows + local``).
+    The placement those leaves get (see :func:`_dlrm_ps_spec`) shards the
+    leading PS axis over the data axis — one shard group per server —
+    falling back to sharding ``max_rows`` (rows *within* every PS block)
+    when n_ps doesn't divide the axis, and to replication otherwise.
+    """
     return {"embed": ("data", None), "wide": ("data", None)}
+
+
+# PS-stacked (n_ps, max_rows, ...) table leaves: prefer one device group
+# per parameter server, then rows-within-shard, then replicate.
+_DLRM_PS_PATTERNS = (("data", None, None), (None, "data", None))
+
+
+def _dlrm_ps_spec(shape, fit_ctx) -> P:
+    for pat in _DLRM_PS_PATTERNS:
+        spec = _fit(pat, shape, fit_ctx)
+        if any(e is not None for e in spec):
+            return spec
+    return P(*([None] * len(shape)))
 
 
 def _path_names(path) -> list[str]:
@@ -187,8 +211,13 @@ def param_specs(tree: Any, cfg=None, model_size: int | None = None,
     ``mesh`` to fit divisibility against the actual axis sizes (required
     for the DLRM "data"-sharded table — a vocab that doesn't divide the
     worker count must fall back to replicated, not crash device_put).
+
+    Multi-PS DLRM: rank-3 embed/wide leaves are treated as PS-stacked
+    (n_ps, max_rows, ...) tables (see :func:`_dlrm_rules` on the
+    repro.ps (shard, local_row) convention) and get the per-PS placement.
     """
-    if cfg is None or getattr(cfg, "family", None) == "dlrm":
+    is_dlrm = cfg is None or getattr(cfg, "family", None) == "dlrm"
+    if is_dlrm:
         rules: dict[str, tuple] = _dlrm_rules()
         # no mesh -> assume divisible (specs are validated by to_shardings
         # callers against a real mesh anyway)
@@ -202,6 +231,10 @@ def param_specs(tree: Any, cfg=None, model_size: int | None = None,
 
     def one(path, leaf):
         names = _path_names(path)
+        # PS-stacked DLRM tables: (n_ps, max_rows, ...) under embed/wide
+        if (is_dlrm and names and names[-1] in ("embed", "wide")
+                and len(leaf.shape) == 3):
+            return _dlrm_ps_spec(leaf.shape, fit_ctx)
         # MoE expert stacks: raw rank-3 arrays directly under "ffn"
         if (names and names[-1] in ("wi", "wg", "wo")
                 and len(names) >= 2 and names[-2] == "ffn"):

@@ -86,13 +86,18 @@ def pooled_lookup(
     *,
     block_e: int = DEFAULT_BLOCK_E,
     block_f: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """sum_f table[ids[b, f]] * weights[b, f]  ->  (B, E).
 
     ids: (B, F) int32, PAD = -1 (weight forced to 0).
     block_f: ids per grid step (None = one row DMA per step).
+    interpret: None = auto — compile for real on a TPU backend, interpret
+    everywhere else (so TPU hosts get the compiled kernel without
+    call-site edits).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, F = ids.shape
     V, E = table.shape
     if weights is None:

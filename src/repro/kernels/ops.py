@@ -11,8 +11,8 @@
   auction_solve_pallas      — eps-scaled auction whose bid phase runs in
                               the Pallas kernel; conflict resolution in jnp.
 
-All default to interpret mode (this container is CPU); on TPU pass
-``interpret=False``.
+``interpret=None`` (the default) auto-selects: compiled on a real TPU
+backend, interpret mode everywhere else (this container is CPU).
 """
 from __future__ import annotations
 
@@ -28,7 +28,8 @@ from .emb_lookup import pooled_lookup
 
 
 def cost_matrix_pallas(samples, latest_in_cache, dirty, t_tran, *,
-                       interpret: bool = True, block_f: int | None = None):
+                       interpret: bool | None = None,
+                       block_f: int | None = None):
     """Alg. 1 as a pooled lookup of the (V, n) per-id cost table.
 
     Matches core.cost.cost_matrix_jnp (incl. per-sample id dedup).
@@ -41,7 +42,7 @@ def cost_matrix_pallas(samples, latest_in_cache, dirty, t_tran, *,
 
 
 def cost_matrix_pallas_sparse(samples, latest_in_cache, dirty, t_tran, *,
-                              interpret: bool = True,
+                              interpret: bool | None = None,
                               block_f: int | None = None):
     """Touched-ids Alg. 1 on the Pallas kernel: per-id cost rows are built
     only for the batch's unique ids (compact (U, n) table, U <= k*F) and

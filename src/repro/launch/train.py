@@ -33,12 +33,13 @@ from ..core.dispatch_tpu import (
     EsdState, esd_dispatch, esd_init, esd_sparse_init, esd_state_update,
     esd_state_update_sparse, need_ids_list, need_matrix,
 )
-from ..core.simulator import DEFAULT_BANDWIDTHS, GBPS
+from ..core.simulator import DEFAULT_BANDWIDTHS, GBPS, hetero_ps_bandwidths
 from ..data.loader import PrefetchLoader
 from ..data.synthetic import WORKLOADS, token_stream
 from ..dist.sharding import param_specs, to_shardings
 from ..models import api, dlrm
 from ..optim import get_optimizer
+from ..ps import make_partition
 
 
 # --------------------------------------------------------------------------
@@ -55,17 +56,36 @@ def run_dlrm(args):
     V = wl.vocab
     use_esd = args.esd_alpha is not None
     capacity = int(args.capacity_ratio * V)
+    sparse_esd = args.esd_engine == "sparse"
 
-    t_tran = jnp.asarray(
-        (cfg.embedding_dim * 4.0) / DEFAULT_BANDWIDTHS(n), jnp.float32
-    )
+    # multi-PS: partition the V-space (repro.ps), run ids/planes/tables in
+    # the PS-linearized space, and cost each op at the owning shard's link
+    part = make_partition(V, args.n_ps, args.ps_layout) if args.n_ps > 1 else None
+    if part is not None and use_esd and not sparse_esd:
+        raise SystemExit("--n-ps > 1 requires --esd-engine sparse "
+                         "(the dense engine has no per-PS accounting)")
+    if args.ps_hetero and part is None:
+        raise SystemExit("--ps-hetero needs --n-ps > 1 (there is no "
+                         "per-shard link to skew with a single PS)")
+    V_space = part.linear_size if part is not None else V
+
+    if part is not None:
+        bw = (hetero_ps_bandwidths(n, part.n_ps) if args.ps_hetero
+              else np.repeat(DEFAULT_BANDWIDTHS(n)[:, None], part.n_ps, axis=1))
+        t_tran = jnp.asarray((cfg.embedding_dim * 4.0) / bw, jnp.float32)
+    else:
+        t_tran = jnp.asarray(
+            (cfg.embedding_dim * 4.0) / DEFAULT_BANDWIDTHS(n), jnp.float32
+        )
     optimizer = get_optimizer("rowwise_adagrad", args.lr)
     params = dlrm.init_params(jax.random.key(args.seed), cfg, wl)
+    if part is not None:
+        # shard the DLRM table over n_ps: (n_ps, max_rows, E) PS stack
+        params = dlrm.ps_stack_tables(params, part)
     opt_state = optimizer.init(params)
-    sparse_esd = args.esd_engine == "sparse"
     if sparse_esd:
         # L = m*F ids per worker post-exchange (need_ids_list width)
-        esd = esd_sparse_init(n, V, capacity if capacity < V else None,
+        esd = esd_sparse_init(n, V_space, capacity if capacity < V else None,
                               max_ids=m * wl.width)
     else:
         esd = esd_init(n, V)
@@ -82,7 +102,7 @@ def run_dlrm(args):
             (s2, d2, l2), _ = esd_dispatch_aux(s, (d, l), esd_state, t_tran,
                                                args.esd_alpha or 0.0)
             need = (need_ids_list(s2, "data") if sparse_esd
-                    else need_matrix(s2, "data", V))
+                    else need_matrix(s2, "data", V_space))
             return s2, d2, l2, need
 
         return shard_map(
@@ -95,7 +115,7 @@ def run_dlrm(args):
 
     def esd_dispatch_aux(s, aux, state, t, alpha):
         m_, F = s.shape
-        exch_s, assign = esd_dispatch(s, state, t, alpha)
+        exch_s, assign = esd_dispatch(s, state, t, alpha, part=part)
         order = jnp.argsort(assign, stable=True)
         outs = []
         for a in aux:
@@ -108,11 +128,19 @@ def run_dlrm(args):
     @partial(jax.jit, donate_argnums=(0, 1))
     def step(params, opt_state, esd_state, sparse, dense, labels):
         counts = None
+        if part is not None:
+            # translate global ids -> (shard, local_row) linearized space
+            # once; dispatch, cache state, and the PS-stacked table lookup
+            # all run on (and stay consistent in) that space
+            sparse = part.to_linear(sparse)
         if use_esd:
             sparse, dense, labels, need = dispatch(esd_state, sparse, dense, labels)
-            update = esd_state_update_sparse if sparse_esd else esd_state_update
-            esd_state, counts = update(
-                esd_state, need, capacity if capacity < V else None)
+            cap = capacity if capacity < V else None
+            if sparse_esd:
+                esd_state, counts = esd_state_update_sparse(
+                    esd_state, need, cap, part)
+            else:
+                esd_state, counts = esd_state_update(esd_state, need, cap)
         loss, grads = jax.value_and_grad(dlrm.bce_loss)(
             params, cfg, sparse, dense, labels)
         params, opt_state = optimizer.update(grads, opt_state, params)
@@ -133,9 +161,16 @@ def run_dlrm(args):
         rec = {"step": i, "loss": loss,
                "wall_s": round(time.perf_counter() - t0, 4)}
         if counts is not None:
-            ops = {op: np.asarray(v) for op, v in counts.items()}
-            rec["cost"] = float(sum((ops[o] * np.asarray(t_total)).sum()
-                                    for o in ops))
+            base_ops = ("miss_pull", "update_push", "evict_push")
+            ops = {op: np.asarray(counts[op]) for op in base_ops}
+            if part is not None:
+                # per-(worker, PS) ops x per-(worker, PS) link times
+                rec["cost"] = float(sum(
+                    (np.asarray(counts[op + "_ps"]) * np.asarray(t_total)).sum()
+                    for op in base_ops))
+            else:
+                rec["cost"] = float(sum((ops[o] * np.asarray(t_total)).sum()
+                                        for o in ops))
             rec.update({op: int(v.sum()) for op, v in ops.items()})
         metrics.append(rec)
         if args.verbose and (i % args.log_every == 0 or i == args.steps - 1):
@@ -211,6 +246,14 @@ def build_parser():
                     help="touched-ids (sparse) or full-plane (dense) "
                          "cost/cache engine")
     ap.add_argument("--capacity-ratio", type=float, default=0.2)
+    ap.add_argument("--n-ps", type=int, default=1,
+                    help="partition the embedding V-space over this many "
+                         "parameter servers (repro.ps)")
+    ap.add_argument("--ps-layout", choices=("contiguous", "hashed"),
+                    default="contiguous")
+    ap.add_argument("--ps-hetero", action="store_true",
+                    help="heterogeneous PS links: last PS 0.5 Gbps, rest "
+                         "5 Gbps (needs --n-ps > 1)")
     ap.add_argument("--ckpt-dir", type=Path, default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=5)

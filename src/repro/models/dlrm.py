@@ -39,6 +39,29 @@ def init_params(key, cfg: DLRMConfig, workload: CTRWorkload):
     return p
 
 
+def _flat_table(tbl):
+    """A lookup view of a table: PS-stacked (n_ps, max_rows, E) flattens
+    so PS-linearized ids index it directly; flat (V, E) passes through."""
+    return tbl.reshape(-1, tbl.shape[-1]) if tbl.ndim == 3 else tbl
+
+
+def ps_stack_tables(params, part):
+    """Re-home the flat (V, ...) tables onto ``part.n_ps`` parameter
+    servers: rows permute into the repro.ps (shard, local_row) layout and
+    stack to (n_ps, max_rows, ...) (padding rows zero, never gathered —
+    lookups use PS-linearized ids against the flattened stack)."""
+    out = dict(params)
+    lin = np.asarray(part.to_linear(np.arange(part.vocab)))
+    for name in ("embed", "wide"):
+        if name not in params:
+            continue
+        tbl = params[name]
+        full = jnp.zeros((part.linear_size, tbl.shape[1]), tbl.dtype)
+        out[name] = full.at[lin].set(tbl).reshape(
+            part.n_ps, part.max_rows, tbl.shape[1])
+    return out
+
+
 def _init_mlp(key, din, dims):
     layers = []
     for i, dout in enumerate(dims):
@@ -58,13 +81,18 @@ def _mlp(layers, x):
 
 def forward(params, cfg: DLRMConfig, sparse_ids, dense, n_fields=None):
     """sparse_ids: (B, W) flat ids (W = fixed fields + multi-hot history
-    slots, PAD=-1); dense: (B, n_dense) -> logits (B,)."""
+    slots, PAD=-1); dense: (B, n_dense) -> logits (B,).
+
+    Multi-PS: the tables may arrive PS-stacked as (n_ps, max_rows, ...)
+    (repro.ps convention) with ids already PS-linearized — the stack
+    flattens so row ``p * max_rows + local`` is PS ``p``'s ``local`` row.
+    """
     from ..data.synthetic import WORKLOADS
     F = n_fields if n_fields is not None else WORKLOADS[cfg.workload].n_fields
     F = min(F, sparse_ids.shape[1])
     valid = sparse_ids >= 0
     ids = jnp.where(valid, sparse_ids, 0)
-    emb_all = params["embed"][ids] * valid[..., None]  # (B, W, E)
+    emb_all = _flat_table(params["embed"])[ids] * valid[..., None]  # (B, W, E)
     # interaction blocks: fields as-is, history mean-pooled into one block
     fields = emb_all[:, :F]
     hist = emb_all[:, F:]
@@ -77,7 +105,7 @@ def forward(params, cfg: DLRMConfig, sparse_ids, dense, n_fields=None):
     if cfg.kind == "wdl":
         deep_in = emb_all.sum(axis=1) / denom + d
         deep = _mlp(params["top"], deep_in)[:, 0]
-        wide = (params["wide"][ids][..., 0] * valid).sum(axis=1)
+        wide = (_flat_table(params["wide"])[ids][..., 0] * valid).sum(axis=1)
         return deep + wide
     if cfg.kind == "dfm":
         # FM second-order via the sum-square trick (fields + pooled + dense)

@@ -66,12 +66,16 @@ def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
 
 
 def rowwise_adagrad(lr: float = 1e-2, eps: float = 1e-10) -> Optimizer:
-    """One accumulator per row for >=2D params, per-element for 1D."""
+    """One accumulator per row for >=2D params, per-element for 1D.
+
+    A "row" is everything but the trailing (embedding) dim, so a
+    PS-stacked (n_ps, max_rows, E) table gets per-(shard, local_row)
+    accumulators — identical to rank-2 behavior for ordinary (V, E)."""
 
     def init(params):
         def acc(p):
             if p.ndim >= 2:
-                return jnp.zeros(p.shape[:1], jnp.float32)
+                return jnp.zeros(p.shape[:-1], jnp.float32)
             return jnp.zeros(p.shape, jnp.float32)
         return jax.tree.map(acc, params)
 
@@ -79,9 +83,9 @@ def rowwise_adagrad(lr: float = 1e-2, eps: float = 1e-10) -> Optimizer:
         def step(p, g, a):
             g = g.astype(jnp.float32)
             if p.ndim >= 2:
-                a_new = a + jnp.mean(jnp.square(g), axis=tuple(range(1, p.ndim)))
+                a_new = a + jnp.mean(jnp.square(g), axis=-1)
                 scale = jax.lax.rsqrt(a_new + eps)
-                upd = g * scale.reshape((-1,) + (1,) * (p.ndim - 1))
+                upd = g * scale[..., None]
             else:
                 a_new = a + jnp.square(g)
                 upd = g * jax.lax.rsqrt(a_new + eps)

@@ -66,3 +66,21 @@ def test_dispatch_bench_quick_run(tmp_path):
     """)
     assert res.returncode == 0, res.stderr[-2000:]
     assert "DISPATCH_BENCH_OK" in res.stdout
+
+
+def test_dispatch_bench_multips_smoke(tmp_path):
+    """run_multips at toy vocab: the ps sweep runs end-to-end, reports a
+    row per (V, n_ps) point, and carries the sub-linearity ratios."""
+    out = tmp_path / "multips.json"
+    res = _run_py(f"""
+        from pathlib import Path
+        from benchmarks.dispatch_bench import run_multips
+        rep = run_multips(vocabs=[20_000, 60_000], ps_list=[1, 2],
+                          reps=1, out=Path({str(out)!r}))
+        assert len(rep["results"]) == 4
+        assert all(r["sparse_ms"] > 0 for r in rep["results"])
+        assert set(rep["sublinear"]) == {{"1", "2"}}
+        print("MULTIPS_BENCH_OK")
+    """)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "MULTIPS_BENCH_OK" in res.stdout
