@@ -18,6 +18,14 @@ layer instead — V past 1e7 with n_ps in {1, 2, 4}, ps-aware cost + state
 update with per-shard counts — writing BENCH_multips.json; single-host V
 caps out around 1e7, so this is the curve that shows the partition layer
 unlocking larger vocabularies without losing the batch-bound step.
+
+``--exchange`` (or :func:`run_exchange`) sweeps the ragged exchange
+plans (repro.exchange) over Zipf skew a in {0, 0.8, 1.2} and n in
+{8, 16}: padded vs ragged wire/pad bytes, Alg.-1 cost under the hard
+m/n cap vs cap_slack, simulated step time, and the jit pack/compact
+executor overhead — writing BENCH_exchange.json.  The acceptance bar:
+>= 30% pad-byte reduction at a = 1.2 and strictly lower Alg.-1 cost
+with slack.
 """
 from __future__ import annotations
 
@@ -235,6 +243,89 @@ def run_multips(vocabs=None, ps_list=None, reps: int = 3,
     return report
 
 
+def _exchange_workload(a: float):
+    """Zipf(a) CTR stream for the exchange sweep (a = 0 is uniform)."""
+    from repro.data.synthetic import CTRWorkload
+    return CTRWorkload(name=f"zipf{a}", model="wdl",
+                       table_sizes=(50_000,) * 4 + (1_000,) * 8,
+                       zipf_a=(a,) * 12, hist_max=8, hist_mean=4.0)
+
+
+def bench_exchange(a: float, n: int, iters: int, m: int = 64,
+                   cap_slack: float = 0.5) -> dict:
+    """Padded vs ragged exchange at Zipf skew ``a`` over ``n`` workers:
+    plan byte accounting + simulated step time (repro.core.simulator
+    charges comm on planned bytes) + the jit pack/compact overhead of the
+    ragged executor measured on one device."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import SimConfig, simulate
+    from repro.exchange.ragged import compact_recv, pack_send
+
+    wl = _exchange_workload(a)
+    base = dict(workload=wl, n_workers=n, batch_per_worker=m,
+                cache_ratio=0.05, iters=iters, warmup=max(2, iters // 4),
+                mechanism="esd", alpha=0.0)
+    res = {}
+    for key, kw in [("padded", dict(exchange="padded")),
+                    ("ragged", dict(exchange="ragged")),
+                    ("ragged_slack", dict(exchange="ragged",
+                                          cap_slack=cap_slack))]:
+        r = simulate(SimConfig(**kw, **base))
+        res[key] = dict(r.exchange, alg1_cost=r.alg1_cost, itps=r.itps)
+
+    # executor overhead: one-device jit pack + compact at the per-shard
+    # shape (the collective itself is wire time, modeled above)
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(0, wl.vocab, (m, wl.width)), jnp.int32)
+    assign = jnp.asarray(rng.integers(0, n, (m,)), jnp.int32)
+    budget = max(m // n, 1)
+
+    @jax.jit
+    def pack_compact(rows, assign):
+        send, counts = pack_send(rows, assign, n, budget)
+        return compact_recv(send, counts, m)[0]
+
+    pack_ms = _time(lambda: pack_compact(rows, assign).block_until_ready(), 5)
+
+    pad_r, pad_p = (res["ragged"]["pad_bytes"],
+                    res["padded"]["wire_bytes"] - res["padded"]["payload_bytes"])
+    return {
+        "zipf_a": a, "n": n, "m": m, "cap_slack": cap_slack,
+        **{k: v for k, v in res.items()},
+        "pad_reduction": (1.0 - pad_r / pad_p) if pad_p else 0.0,
+        "alg1_drop": 1.0 - res["ragged_slack"]["alg1_cost"]
+        / res["ragged"]["alg1_cost"],
+        "pack_ms": pack_ms,
+    }
+
+
+def run_exchange(quick: bool = False, out: Path | None = None) -> dict:
+    """Exchange sweep -> BENCH_exchange.json (quick runs land in
+    BENCH_exchange_quick.json so CI smoke never clobbers the tracked
+    full-sweep record)."""
+    if out is None:
+        out = RESULTS / ("BENCH_exchange_quick.json" if quick
+                         else "BENCH_exchange.json")
+    zipfs = [1.2] if quick else [0.0, 0.8, 1.2]
+    ns = [8] if quick else [8, 16]
+    iters = 8 if quick else 24
+    report = {"config": {"m": 64, "iters": iters, "cap_slack": 0.5},
+              "results": []}
+    for a in zipfs:
+        for n in ns:
+            r = bench_exchange(a, n, iters)
+            report["results"].append(r)
+            print(f"exchange.a{a}.n{n},{r['pack_ms'] * 1e3:.0f},"
+                  f"pad_red={r['pad_reduction']:.2f},"
+                  f"alg1_drop={r['alg1_drop']:.2f},"
+                  f"wire_MB={r['ragged']['wire_bytes'] / 1e6:.2f}/"
+                  f"{r['padded']['wire_bytes'] / 1e6:.2f}")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    return report
+
+
 def run(quick: bool = False, out: Path | None = None) -> dict:
     # quick runs land in a separate file so CI smoke never clobbers the
     # tracked full-sweep perf-trajectory record
@@ -268,10 +359,16 @@ if __name__ == "__main__":
     ap.add_argument("--multips", action="store_true",
                     help="run the multi-PS V-sweep (BENCH_multips.json) "
                          "instead of the dense-vs-sparse comparison")
+    ap.add_argument("--exchange", action="store_true",
+                    help="run the ragged-exchange sweep "
+                         "(BENCH_exchange.json) instead of the "
+                         "dense-vs-sparse comparison")
     ap.add_argument("--ps", default="1,2,4",
                     help="comma list of n_ps values for --multips")
     args = ap.parse_args()
-    if args.multips:
+    if args.exchange:
+        run_exchange(quick=args.quick)
+    elif args.multips:
         ps_list = [int(x) for x in args.ps.split(",")]
         run_multips(vocabs=[200_000, 2_000_000] if args.quick else None,
                     ps_list=ps_list,

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .cache import ClusterCache, IterStats
+from .cache import ClusterCache, IterStats, init_ps_stats, ps_op_count
 from .heu import heu_dispatch
 
 __all__ = ["laia_dispatch", "random_dispatch", "HETCache", "FAECache"]
@@ -53,7 +53,11 @@ class HETCache(ClusterCache):
     pulling; a dirty entry is pushed only when its unsynced-update count
     reaches ``staleness`` (or on eviction).  Dispatch is random.  This
     trades accuracy for fewer transmissions (the paper runs HET under BSP,
-    where it loses its advantage)."""
+    where it loses its advantage).
+
+    Multi-PS: built with ``part=`` (ids in the PS-linearized space) every
+    op is additionally counted against the owning shard's link
+    (``IterStats.*_ps``), like the version-tracked caches."""
 
     def __init__(self, *args, staleness: int = 2, **kw):
         super().__init__(*args, **kw)
@@ -75,9 +79,14 @@ class HETCache(ClusterCache):
             lookups=need.sum(axis=1).astype(np.int64),
             hits=np.zeros(n, np.int64),
         )
+        self._init_ps_stats(stats)
         # lazy write-back: push entries whose local update count hit the bound
         push = self.dirty & (self.dirty_cnt >= self.staleness)
         stats.update_push += push.sum(axis=1)
+        if self.part is not None:
+            # V == n_ps * max_rows: linear-space columns group by shard
+            stats.update_push_ps += push.reshape(
+                n, self.part.n_ps, -1).sum(axis=2)
         if push.any():
             pushed_any = push.any(axis=0)
             # copies held elsewhere fall one version behind the pushed value
@@ -93,6 +102,8 @@ class HETCache(ClusterCache):
                 continue
             miss_ids = ids[~usable[j, ids]]
             stats.miss_pull[j] += len(miss_ids)
+            if self.part is not None:
+                stats.miss_pull_ps[j] += self._ps_count(miss_ids)
             resident = miss_ids[self.present[j, miss_ids]]
             self.lag[j, resident] = 0
             new_ids = miss_ids[~self.present[j, miss_ids]]
@@ -103,6 +114,8 @@ class HETCache(ClusterCache):
                     victims = self._pick_victims(j, need[j], overflow)
                     vdirty = victims[self.dirty[j, victims]]
                     stats.evict_push[j] += len(vdirty)
+                    if self.part is not None:
+                        stats.evict_push_ps[j] += self._ps_count(vdirty)
                     self.dirty[j, victims] = False
                     self.dirty_cnt[j, victims] = 0
                     self.present[j, victims] = False
@@ -125,11 +138,22 @@ class HETCache(ClusterCache):
 class FAECache:
     """FAE [4]: top-popular ids (offline profile) replicated on every worker
     and synchronized with AllReduce; cold ids are accessed PS-direct
-    (pull + push per use).  Static — no runtime cache management."""
+    (pull + push per use).  Static — no runtime cache management.
 
-    def __init__(self, n_workers: int, vocab: int, capacity: int, hot_ids: np.ndarray):
+    Multi-PS: with ``part=`` (ids in the PS-linearized space) cold
+    pulls/pushes are counted against the owning shard's link, and the
+    hot-set AllReduce legs are charged at the shard that homes each hot
+    id (the reduced values still have to reach/leave that server)."""
+
+    def __init__(self, n_workers: int, vocab: int, capacity: int,
+                 hot_ids: np.ndarray, part=None):
         self.n = n_workers
         self.V = vocab
+        self.part = part
+        if part is not None and part.n_ps > 1 and vocab != part.linear_size:
+            raise ValueError(
+                f"vocab {vocab} != part.linear_size {part.linear_size}: "
+                "multi-PS caches run on the PS-linearized id space")
         self.hot = np.zeros(vocab, bool)
         self.hot[np.asarray(hot_ids)[:capacity]] = True
 
@@ -140,6 +164,9 @@ class FAECache:
     def snapshot(self):
         return self.latest_in_cache, np.zeros((self.n, self.V), bool)
 
+    def _ps_count(self, ids) -> np.ndarray:
+        return ps_op_count(self.part, ids)
+
     def step(self, batches) -> IterStats:
         n = self.n
         stats = IterStats(
@@ -149,6 +176,8 @@ class FAECache:
             lookups=np.zeros(n, np.int64),
             hits=np.zeros(n, np.int64),
         )
+        if self.part is not None:
+            init_ps_stats(stats, n, self.part.n_ps)
         for j, ids in enumerate(batches):
             ids = np.asarray(ids)
             stats.lookups[j] = len(ids)
@@ -160,4 +189,8 @@ class FAECache:
             # sparse AllReduce of this worker's trained hot gradients:
             # send own contributions + receive the reduced values
             stats.update_push[j] += 2 * int(hot.sum())
+            if self.part is not None:
+                cold_ps = self._ps_count(ids[~hot])
+                stats.miss_pull_ps[j] += cold_ps
+                stats.update_push_ps[j] += cold_ps + 2 * self._ps_count(ids[hot])
         return stats

@@ -44,9 +44,26 @@ from typing import Literal, Sequence
 
 import numpy as np
 
-__all__ = ["ClusterCache", "SparseClusterCache", "IterStats", "Policy"]
+__all__ = ["ClusterCache", "SparseClusterCache", "IterStats", "Policy",
+           "init_ps_stats", "ps_op_count"]
 
 Policy = Literal["emark", "lru", "lfu"]
+
+
+def init_ps_stats(stats: "IterStats", n: int, n_ps: int) -> None:
+    """Zero the per-(worker, PS) breakdowns on ``stats`` (shared by every
+    cache model that carries multi-PS accounting)."""
+    shape = (n, n_ps)
+    stats.miss_pull_ps = np.zeros(shape, np.int64)
+    stats.update_push_ps = np.zeros(shape, np.int64)
+    stats.evict_push_ps = np.zeros(shape, np.int64)
+
+
+def ps_op_count(part, ids) -> np.ndarray:
+    """(n_ps,) op count per owning shard for linear-space ``ids``."""
+    return np.bincount(
+        part.shard_of_linear(np.asarray(ids, np.int64)),
+        minlength=part.n_ps).astype(np.int64)
 
 
 @dataclasses.dataclass
@@ -91,11 +108,15 @@ class IterStats:
 class ClusterCache:
     """Mutable cluster cache state (numpy, simulator-side)."""
 
+    # per-PS capacity budgets are a touched-ids-engine feature (the dense
+    # engine's O(V) victim scan has no per-shard bookkeeping)
+    supports_capacity_ps = False
+
     def __init__(
         self,
         n_workers: int,
         vocab: int,
-        capacity: int,
+        capacity,
         policy: Policy = "emark",
         sync: Literal["on_demand", "eager"] = "on_demand",
         seed: int = 0,
@@ -103,7 +124,21 @@ class ClusterCache:
     ):
         self.n = n_workers
         self.V = vocab
-        self.capacity = int(capacity)
+        if np.ndim(capacity) > 0:
+            # per-PS worker-cache budgets: capacity[p] ids owned by shard
+            # p per worker (requires part; sparse engine only)
+            if part is None or part.n_ps != len(capacity):
+                raise ValueError(
+                    f"capacity_ps needs part with n_ps == {len(capacity)}")
+            if not self.supports_capacity_ps:
+                raise ValueError(
+                    "per-PS capacity budgets need the SparseClusterCache "
+                    "engine")
+            self.capacity_ps = np.asarray(capacity, np.int64)
+            self.capacity = int(self.capacity_ps.sum())
+        else:
+            self.capacity_ps = None
+            self.capacity = int(capacity)
         self.policy: Policy = policy
         self.sync = sync   # "eager": push every dirty entry each iteration
                            # (HET-under-BSP per the paper's evaluation setup)
@@ -236,16 +271,10 @@ class ClusterCache:
     # -- multi-PS accounting helpers -----------------------------------------
     def _init_ps_stats(self, stats: IterStats):
         if self.part is not None:
-            shape = (self.n, self.part.n_ps)
-            stats.miss_pull_ps = np.zeros(shape, np.int64)
-            stats.update_push_ps = np.zeros(shape, np.int64)
-            stats.evict_push_ps = np.zeros(shape, np.int64)
+            init_ps_stats(stats, self.n, self.part.n_ps)
 
     def _ps_count(self, ids) -> np.ndarray:
-        """(n_ps,) op count per owning shard for linear-space ``ids``."""
-        return np.bincount(
-            self.part.shard_of_linear(np.asarray(ids, np.int64)),
-            minlength=self.part.n_ps).astype(np.int64)
+        return ps_op_count(self.part, ids)
 
     # -- eviction ------------------------------------------------------------
     def _pick_victims(self, j: int, pinned: np.ndarray, count: int) -> np.ndarray:
@@ -306,12 +335,25 @@ class SparseClusterCache(ClusterCache):
     come from the per-worker resident set (<= capacity ids) instead of an
     O(V) scan.  Under ``sync="eager"`` the touched universe additionally
     includes every dirty id (the full-set sync pushes them all).
+
+    Per-PS budgets: built with ``capacity=[cap_0, ..., cap_{n_ps-1}]``
+    (and ``part=``), each worker keeps at most ``cap_p`` ids owned by
+    shard ``p`` — admission and eviction run per shard over per-shard
+    resident sets, so one hot shard can no longer starve the others'
+    cache share.  The Emark epoch bump stays cache-wide (it is a
+    per-worker clock, not a per-shard one).  A plain int is the
+    unchanged (bitwise) single-budget path.
     """
+
+    supports_capacity_ps = True
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         self._resident = [set() for _ in range(self.n)]
         self._dirtyset = [set() for _ in range(self.n)]
+        if self.capacity_ps is not None:
+            self._resident_ps = [[set() for _ in range(self.part.n_ps)]
+                                 for _ in range(self.n)]
 
     # -- one BSP iteration ---------------------------------------------------
     def step(self, batches: Sequence[np.ndarray]) -> IterStats:
@@ -388,25 +430,7 @@ class SparseClusterCache(ClusterCache):
             self.latest[j, resident_stale] = True
             new_ids = miss_ids[~self.present[j, miss_ids]]
             if len(new_ids):
-                free = self.capacity - len(self._resident[j])
-                overflow = len(new_ids) - free
-                if overflow > 0:
-                    victims = self._pick_victims_sparse(j, ids, overflow)
-                    vdirty = victims[self.dirty[j, victims]]
-                    stats.evict_push[j] += len(vdirty)
-                    if self.part is not None:
-                        stats.evict_push_ps[j] += self._ps_count(vdirty)
-                    if len(vdirty):
-                        self.dirty[j, vdirty] = False
-                        self._dirtyset[j].difference_update(vdirty.tolist())
-                        others = np.arange(n) != j
-                        self.latest[np.ix_(others, vdirty)] = False
-                    self.present[j, victims] = False
-                    self.latest[j, victims] = False
-                    self._resident[j].difference_update(victims.tolist())
-                self.present[j, new_ids] = True
-                self.latest[j, new_ids] = True
-                self._resident[j].update(new_ids.tolist())
+                self._admit(j, ids, new_ids, stats)
 
         # ---- Phase C: train ------------------------------------------------
         for j in range(n):
@@ -426,21 +450,86 @@ class SparseClusterCache(ClusterCache):
         self.latest[:, touched] = lat
         return stats
 
-    # -- eviction (bounded candidate set) ------------------------------------
+    # -- admission (+ bounded-candidate evictions) ---------------------------
+    def _admit(self, j: int, pinned_ids: np.ndarray, new_ids: np.ndarray,
+               stats: IterStats):
+        """Insert ``new_ids`` into worker j's cache, evicting per budget.
+
+        With a single capacity this is one admission over the whole set
+        (the original, bitwise-unchanged path); with per-PS budgets the
+        new ids are admitted shard by shard against ``capacity_ps[p]``.
+        """
+        n = self.n
+        if self.capacity_ps is None:
+            groups = [(None, new_ids)]
+        else:
+            shard_new = self.part.shard_of_linear(new_ids)
+            groups = [(p, new_ids[shard_new == p])
+                      for p in range(self.part.n_ps)]
+        for p, ids_p in groups:
+            if not len(ids_p):
+                continue
+            if p is None:
+                free = self.capacity - len(self._resident[j])
+            else:
+                free = int(self.capacity_ps[p]) - len(self._resident_ps[j][p])
+            overflow = len(ids_p) - free
+            if overflow > 0:
+                victims = self._pick_victims_sparse(j, pinned_ids, overflow,
+                                                    shard=p)
+                vdirty = victims[self.dirty[j, victims]]
+                stats.evict_push[j] += len(vdirty)
+                if self.part is not None:
+                    stats.evict_push_ps[j] += self._ps_count(vdirty)
+                if len(vdirty):
+                    self.dirty[j, vdirty] = False
+                    self._dirtyset[j].difference_update(vdirty.tolist())
+                    others = np.arange(n) != j
+                    self.latest[np.ix_(others, vdirty)] = False
+                self.present[j, victims] = False
+                self.latest[j, victims] = False
+                self._resident[j].difference_update(victims.tolist())
+                if p is not None:
+                    self._resident_ps[j][p].difference_update(victims.tolist())
+            self.present[j, ids_p] = True
+            self.latest[j, ids_p] = True
+            self._resident[j].update(ids_p.tolist())
+            if p is not None:
+                self._resident_ps[j][p].update(ids_p.tolist())
+
     def _pick_victims_sparse(self, j: int, pinned_ids: np.ndarray,
-                             count: int) -> np.ndarray:
+                             count: int, shard: int | None = None) -> np.ndarray:
         # sorted ascending so keys (and argpartition tie-breaks) line up
         # exactly with the dense engine's np.where scan order
-        cand_set = self._resident[j].difference(pinned_ids.tolist())
+        pool = (self._resident[j] if shard is None
+                else self._resident_ps[j][shard])
+        cand_set = pool.difference(pinned_ids.tolist())
         cand = np.fromiter(cand_set, np.int64, len(cand_set))
         cand.sort()
+        # the Emark epoch bump ranges over the whole cache either way
         resident = np.fromiter(self._resident[j], np.int64,
                                len(self._resident[j]))
         return self._select_victims(j, cand, resident, count)
 
     # -- warm start ----------------------------------------------------------
     def prefill(self, hot_ids: np.ndarray):
-        super().prefill(hot_ids)
-        ids = np.asarray(hot_ids)[: self.capacity].tolist()
-        self._resident = [set(ids) for _ in range(self.n)]
+        if self.capacity_ps is None:
+            super().prefill(hot_ids)
+            ids = np.asarray(hot_ids)[: self.capacity].tolist()
+            self._resident = [set(ids) for _ in range(self.n)]
+        else:
+            # per-shard budgets: take the hottest ids of each shard
+            hot = np.asarray(hot_ids)
+            shard = self.part.shard_of_linear(hot)
+            keep = [hot[shard == p][: int(self.capacity_ps[p])]
+                    for p in range(self.part.n_ps)]
+            ids = np.concatenate(keep) if keep else hot[:0]
+            self.present[:, :] = False
+            self.latest[:, :] = False
+            self.dirty[:, :] = False
+            self.present[:, ids] = True
+            self.latest[:, ids] = True
+            self._resident = [set(ids.tolist()) for _ in range(self.n)]
+            self._resident_ps = [[set(k.tolist()) for k in keep]
+                                 for _ in range(self.n)]
         self._dirtyset = [set() for _ in range(self.n)]

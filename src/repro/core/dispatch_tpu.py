@@ -7,11 +7,14 @@ Mapping of the paper's edge mechanism onto a TPU mesh (DESIGN.md §2):
     sharded global embedding table;
   * heterogeneous 0.5/5 Gbps links = per-worker ``t_tran`` vector (for
     multi-pod meshes: intra-pod ICI vs inter-pod DCN, ~8x apart);
-  * the dispatch itself = a **static** ``lax.all_to_all``: each shard
-    solves its own m-sample assignment with per-target capacity m/n
-    (paper §4.1 runs the dispatcher locally on each worker), so every
-    shard sends exactly m/n samples to every worker — a fixed-shape
-    collective, no ragged exchange.
+  * the dispatch itself: each shard solves its own m-sample assignment
+    (paper §4.1 runs the dispatcher locally on each worker) and the
+    samples move over one of two wire paths — the **padded** baseline
+    (per-target capacity exactly m/n, one fixed-shape ``lax.all_to_all``)
+    or the **ragged** executor (repro.exchange: pow2-budgeted send
+    blocks + valid-count masks + receiver compaction), which with
+    ``cap_slack > 0`` lets the assignment skew past m/n and strictly
+    lowers the Alg.-1 objective under Zipf/heterogeneous-link skew.
 
 Everything here is jit-compatible (runs inside the train step):
   * Alg. 1 cost matrix  — core.cost.cost_matrix_sparse_jnp by default
@@ -49,8 +52,9 @@ translation, so the single-PS path is bit-for-bit unchanged.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -63,7 +67,8 @@ from .cost import (cost_matrix_jnp, cost_matrix_sparse_jnp,
 __all__ = ["EsdState", "esd_init", "esd_dispatch", "esd_state_update",
            "SparseEsdState", "esd_sparse_init", "esd_state_update_sparse",
            "need_ids_list", "need_ids_local", "heu_dispatch_jax",
-           "auction_fixed", "hybrid_dispatch_jax"]
+           "auction_fixed", "hybrid_dispatch_jax", "dispatch_cap",
+           "exchange_budget"]
 
 
 # --------------------------------------------------------------------------
@@ -132,13 +137,19 @@ def auction_fixed(C, capacity: int, n_phases: int = 7,
     return state[0]
 
 
-def hybrid_dispatch_jax(C, m: int, alpha: float):
+def hybrid_dispatch_jax(C, m: int, alpha: float, cap: Optional[int] = None):
     """Alg. 2 in-jit: top floor(k*alpha) regret rows -> auction, rest ->
-    greedy, per-worker capacity exactly m/n each side."""
+    greedy.  Per-worker capacity defaults to the hard m/n split; pass
+    ``cap > m/n`` (esd_dispatch's ``cap_slack``) to let the assignment
+    skew — feasible because the ragged exchange no longer needs equal
+    groups, and skew strictly lowers the Alg.-1 objective."""
     k, n = C.shape
     if n == 1:
         return jnp.zeros((k,), jnp.int32)
-    cap = m // n if m >= n else 1
+    if cap is None:
+        cap = m // n if m >= n else 1
+    if cap * n < k:
+        raise ValueError(f"infeasible: cap {cap} * n {n} < k {k}")
     if alpha <= 0.0:
         return heu_dispatch_jax(C, cap)
     opt_cap = int(np.floor(cap * alpha)) if alpha < 1.0 else cap
@@ -272,11 +283,20 @@ class SparseEsdState:
     step: jnp.ndarray          # () int32
 
 
-def esd_sparse_init(n_workers: int, vocab: int, capacity: Optional[int] = None,
+def esd_sparse_init(n_workers: int, vocab: int,
+                    capacity: Optional[Union[int, Sequence[int]]] = None,
                     max_ids: int = 0) -> SparseEsdState:
     """``max_ids`` = L, the per-worker padded id-list width the state will
-    be stepped with (needed to size the slot buffer: S = capacity + L)."""
-    S = 0 if capacity is None or capacity >= vocab else capacity + max_ids
+    be stepped with (needed to size the slot buffer: S = capacity + L).
+
+    ``capacity`` may be a per-PS sequence (one worker-cache budget per
+    parameter server, see :func:`esd_state_update_sparse`); the slot
+    buffer then holds one (cap_p + L)-wide segment per shard.
+    """
+    if capacity is not None and np.ndim(capacity) > 0:
+        S = int(sum(int(c) + max_ids for c in capacity))
+    else:
+        S = 0 if capacity is None or capacity >= vocab else capacity + max_ids
     return SparseEsdState(jnp.zeros((n_workers, vocab), bool),
                           jnp.zeros((n_workers, vocab), bool),
                           jnp.zeros((n_workers, vocab), jnp.int32),
@@ -285,7 +305,8 @@ def esd_sparse_init(n_workers: int, vocab: int, capacity: Optional[int] = None,
 
 
 def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
-                            capacity: Optional[int] = None, part=None):
+                            capacity: Optional[Union[int, Sequence[int]]] = None,
+                            part=None):
     """Incremental BSP iteration: same protocol and counts as
     :func:`esd_state_update`, driven by touched ids only.
 
@@ -298,6 +319,13 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
     per-(worker, PS) breakdown ``{miss_pull,update_push,evict_push}_ps``
     of shape (n, n_ps), so the caller can charge per-shard link costs.
     The state transition itself is unchanged.
+
+    ``capacity`` may then also be a length-``n_ps`` sequence of per-PS
+    worker-cache budgets: each worker keeps at most ``capacity[p]`` ids
+    owned by shard ``p`` and the LRU cut runs independently per shard
+    (init the state with the same sequence so the slot buffer carries
+    one segment per shard).  A plain int is the unchanged (bitwise)
+    single-budget path.
     """
     n, L = need_ids.shape
     V = state.latest.shape[1]
@@ -305,6 +333,14 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
         raise ValueError(
             f"state plane width {V} != part.linear_size {part.linear_size}: "
             "multi-PS state runs on the PS-linearized id space")
+    capacity_ps = None
+    if capacity is not None and np.ndim(capacity) > 0:
+        if part is None:
+            raise ValueError("per-PS capacity budgets need part=")
+        if len(capacity) != part.n_ps:
+            raise ValueError(f"capacity_ps has {len(capacity)} entries for "
+                             f"n_ps = {part.n_ps}")
+        capacity_ps = tuple(int(c) for c in capacity)
     step = state.step + 1
     valid = need_ids >= 0
 
@@ -367,7 +403,58 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
     evict_push_ps = (jnp.zeros((n, part.n_ps), jnp.int32)
                      if part is not None else None)
     slots = state.slots
-    if capacity is not None and capacity < V:
+    if capacity_ps is not None:
+        # per-PS budgets: the identical strict cut, run once per shard
+        # over that shard's candidates (its slot segment + this step's
+        # ids homed there), each against its own capacity[p]
+        offs = np.cumsum([0] + [c + L for c in capacity_ps])
+        if slots.shape[1] < offs[-1]:
+            raise ValueError(
+                f"slot buffer {slots.shape[1]} < sum(cap_p + L) = {offs[-1]}; "
+                "init the state with esd_sparse_init(..., capacity_ps, "
+                "max_ids=L)")
+        imax = jnp.iinfo(jnp.int32).max
+        shard_need = part.shard_of_linear(jnp.where(valid, need_ids, 0))
+        new_segs, ev_counts = [], []
+        for p, cap_p in enumerate(capacity_ps):
+            valid_p = valid & (shard_need == p)
+            need_p = jnp.where(valid_p, need_ids, -1)
+            slots_p = state.slots[:, offs[p]:offs[p] + cap_p + L]
+            need_sorted = jnp.sort(jnp.where(valid_p, need_ids, imax), axis=1)
+            hit = jnp.take_along_axis(
+                need_sorted,
+                jnp.clip(jax.vmap(jnp.searchsorted)(need_sorted, slots_p),
+                         0, L - 1),
+                axis=1)
+            slot_cand = jnp.where((hit == slots_p) & (slots_p >= 0), -1,
+                                  slots_p)
+            cand = jnp.concatenate([need_p, slot_cand], axis=1)
+            gc = jnp.clip(cand, 0, V - 1)
+            la_c = jnp.where(cand >= 0, last_access[rows, gc], -1)
+            sla, sid = jax.lax.sort((la_c, cand), dimension=1, num_keys=2)
+            T_p = cand.shape[1]                      # = cap_p + 2L
+            zone = slice(T_p - cap_p - 2 * L, T_p - cap_p)
+            ev = (sla[:, zone] >= 0) & (sla[:, zone] < step)
+            ev_ids = jnp.where(ev, sid[:, zone], V)
+            egc = jnp.minimum(ev_ids, V - 1)
+            lat_e = latest[rows, egc] & ev
+            dr_e = dirty[rows, egc] & ev
+            ev_counts.append((lat_e & dr_e).sum(axis=1).astype(jnp.int32))
+            latest = latest.at[rows, ev_ids].set(False, mode="drop")
+            dirty = dirty.at[rows, ev_ids].set(False, mode="drop")
+            S_p = cap_p + L
+            top_la, top_id = sla[:, T_p - S_p:], sid[:, T_p - S_p:]
+            keepm = (top_la >= 0) & ((jnp.arange(S_p) >= S_p - cap_p)[None, :]
+                                     | (top_la == step))
+            new_segs.append(jnp.where(keepm, top_id, -1))
+        evict_push = sum(ev_counts)
+        evict_push_ps = jnp.stack(ev_counts, axis=1)   # part is never None here
+        slots = jnp.concatenate(new_segs, axis=1)
+        if slots.shape[1] < state.slots.shape[1]:
+            slots = jnp.concatenate(
+                [slots, jnp.full((n, state.slots.shape[1] - slots.shape[1]),
+                                 -1, jnp.int32)], axis=1)
+    elif capacity is not None and capacity < V:
         if slots.shape[1] < capacity + L:
             raise ValueError(
                 f"slot buffer {slots.shape[1]} < capacity+L = {capacity + L}; "
@@ -439,32 +526,83 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
 # --------------------------------------------------------------------------
 # the shard_map dispatch + exchange
 # --------------------------------------------------------------------------
+_pallas_ps_warned = False
+
+
+def _warn_pallas_ps_fallback():
+    """One-time notice that multi-PS Alg. 1 degrades to the jnp path."""
+    global _pallas_ps_warned
+    if not _pallas_ps_warned:
+        warnings.warn(
+            "esd_dispatch(use_pallas=True) with n_ps > 1: the ps-aware "
+            "Alg. 1 has no Pallas variant yet — falling back to "
+            "cost_matrix_sparse_ps_jnp (see ROADMAP multi-PS item)",
+            RuntimeWarning, stacklevel=3)
+        _pallas_ps_warned = True
+
+
+def dispatch_cap(m: int, n: int, cap_slack: float = 0.0) -> int:
+    """Per-(shard, worker) dispatch capacity: the hard m/n split relaxed
+    by ``cap_slack`` (fraction of m/n a worker may exceed it by)."""
+    base = m // n if m >= n else 1
+    if cap_slack <= 0.0:
+        return base
+    return min(m, int(np.ceil(base * (1.0 + cap_slack))))
+
+
+def exchange_budget(cap: int, m: int) -> int:
+    """Static per-link send-block rows for the ragged executor: the
+    capacity bucketed up to a power of two (<= m), so sweeping cap_slack
+    recompiles once per bucket instead of once per cap value."""
+    return min(m, 1 << max(cap - 1, 0).bit_length())
+
+
 def esd_dispatch(samples, state, t_tran, alpha: float,
                  axis_name: str = "data", use_pallas: bool = False,
-                 sparse_cost: bool = True, part=None):
+                 sparse_cost: bool = True, part=None,
+                 cap_slack: float = 0.0, exchange: str = "padded"):
     """Inside shard_map over ``axis_name``: dispatch this shard's samples.
 
-    samples: (m, F) local ids.  Returns (exchanged_samples (m, F), assign).
-    Every shard sends exactly m/n samples to each worker: a static
-    all_to_all.
+    samples: (m, F) local ids.  Returns (exchanged_samples, assign).
+
+    ``exchange`` selects the wire path:
+      * ``"padded"`` — every shard sends exactly m/n samples to each
+        worker: one fixed-shape all_to_all, the bitwise baseline.
+        Requires ``cap_slack == 0`` (equal groups).
+      * ``"ragged"`` — the repro.exchange executor: per-destination send
+        blocks of a static pow2 budget with valid-count masks, receiver
+        compaction.  With ``cap_slack == 0`` the budget is exactly m/n
+        and the result is bitwise-equal to the padded path (n = 1
+        trivially so); with ``cap_slack > 0`` the assignment may give a
+        worker up to ``dispatch_cap(m, n, cap_slack)`` samples per
+        shard — strictly lowering the Alg.-1 objective under skew — and
+        the exchanged batch comes back as (n * budget, F) with the valid
+        rows compacted to the front and PAD (-1) rows after.
 
     ``sparse_cost`` selects the touched-ids Alg. 1 path (O(m*F*n), the
     default) over the dense (V, n)-table path; both are equivalence-tested.
-    With ``use_pallas`` the corresponding Pallas kernel variant is used.
+    With ``use_pallas`` the corresponding Pallas kernel variant computes
+    the cost matrix and the ragged pack runs the one-pass Pallas kernel.
 
     Multi-PS: pass ``part`` (a static :class:`repro.ps.PsPartition` with
     ``n_ps > 1``) plus a per-(worker, PS) ``t_tran`` of shape (n, n_ps);
     samples and the state planes must then be in the PS-linearized space,
     and a miss/push on an id is costed at the owning shard's link.
+    ``use_pallas`` degrades to the jnp ps cost matrix (no ps Pallas
+    kernel yet) with a one-time RuntimeWarning.
     """
     m, F = samples.shape
+    if exchange not in ("padded", "ragged"):
+        raise ValueError(f"unknown exchange mode {exchange!r}")
+    if cap_slack > 0.0 and exchange != "ragged":
+        raise ValueError("cap_slack > 0 needs exchange='ragged' (the padded "
+                         "all_to_all requires equal m/n groups)")
     # constant-folds to the static mesh axis size at trace time
     # (jax.lax.axis_size is not available on this jax version)
     n = jax.lax.psum(1, axis_name)
     if part is not None and part.n_ps > 1:
         if use_pallas:
-            raise NotImplementedError(
-                "multi-PS Alg. 1 has no Pallas variant yet (jnp only)")
+            _warn_pallas_ps_fallback()
         C = cost_matrix_sparse_ps_jnp(samples, state.latest, state.dirty,
                                       t_tran, part, linear=True)
     elif use_pallas:
@@ -474,7 +612,16 @@ def esd_dispatch(samples, state, t_tran, alpha: float,
     else:
         fn = cost_matrix_sparse_jnp if sparse_cost else cost_matrix_jnp
         C = fn(samples, state.latest, state.dirty, t_tran)
-    assign = hybrid_dispatch_jax(C, m, alpha)
+    cap = dispatch_cap(m, n, cap_slack)
+    assign = hybrid_dispatch_jax(C, m, alpha, cap=cap)
+    if exchange == "ragged":
+        from ..exchange.ragged import ragged_exchange
+        budget = cap if cap_slack <= 0.0 else exchange_budget(cap, m)
+        out_rows = m if cap_slack <= 0.0 else n * budget
+        out, _, _ = ragged_exchange(samples, assign, axis_name, budget,
+                                    out_rows=out_rows,
+                                    use_pallas=use_pallas)
+        return out, assign
     order = jnp.argsort(assign, stable=True)             # groups of m/n
     routed = samples[order].reshape(n, m // n, F)
     exchanged = jax.lax.all_to_all(routed, axis_name, 0, 0, tiled=False)

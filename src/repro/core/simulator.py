@@ -32,10 +32,19 @@ owning shard's link (``ps_bandwidths[j, p]``), and a worker's
 per-iteration comm time is the max over the shards it touched (links
 transfer in parallel).  ``hetero_ps_bandwidths`` builds the skewed-links
 scenario (one slow PS, rest fast) the paper's heterogeneous-network
-experiments correspond to.  Supported for the esd/laia/random mechanisms
-and het-under-BSP (the version-tracked caches); FAE and stale-HET have
-no per-PS accounting in their cache models, so those combinations are
-rejected with a ValueError (see ROADMAP).
+experiments correspond to.  All mechanisms carry per-PS accounting
+(the FAE / stale-HET baseline caches included).
+
+Sample exchange (``SimConfig.exchange``): with ``"padded"`` or
+``"ragged"`` the per-iteration wall time also charges the worker-to-
+worker sample exchange the dispatch implies, using the compiled plan's
+exact byte accounting (repro.exchange.plan): the padded baseline ships
+one uniform block per link (the max per-link count), the ragged path
+ships the pow2-bucketed schedule — so comm time follows planned bytes,
+not worst-case padding.  ``cap_slack > 0`` relaxes ESD's per-worker
+capacity past m (feasible under the ragged exchange), which strictly
+lowers the Alg.-1 objective (``SimResult.alg1_cost``) under skew.
+``exchange=None`` (default) keeps the pre-exchange accounting bitwise.
 """
 from __future__ import annotations
 
@@ -46,6 +55,7 @@ from typing import Literal
 import numpy as np
 
 from ..data.synthetic import CTRWorkload
+from ..exchange.plan import compile_plan
 from ..ps import make_partition
 from .baselines import FAECache, HETCache, laia_dispatch, random_dispatch
 from .cache import ClusterCache, IterStats, SparseClusterCache
@@ -102,6 +112,13 @@ class SimConfig:
     n_ps: int = 1
     ps_layout: Literal["contiguous", "hashed"] = "contiguous"
     ps_bandwidths: np.ndarray | None = None
+    # sample-exchange accounting: charge the dispatch's worker-to-worker
+    # sample movement at planned bytes ("ragged") or at the fixed-shape
+    # baseline's uniform blocks ("padded"); None = not modeled (bitwise
+    # pre-exchange behavior).  cap_slack relaxes ESD's per-worker
+    # capacity by that fraction of m (needs exchange="ragged").
+    exchange: Literal["padded", "ragged"] | None = None
+    cap_slack: float = 0.0
 
     @property
     def d_tran(self) -> float:
@@ -139,14 +156,23 @@ class SimResult:
     ingredient: dict                  # {bandwidth_class: {op: count}}
     per_iter_cost: np.ndarray
     per_iter_time: np.ndarray
+    # Alg.-1 objective of the chosen assignments (esd only), post-warmup
+    alg1_cost: float | None = None
+    # sample-exchange byte/time accounting (SimConfig.exchange set)
+    exchange: dict | None = None
 
     def summary(self) -> dict:
-        return {
+        out = {
             "cost": self.cost,
             "itps": self.itps,
             "hit_ratio": self.hit_ratio,
             "decision_ms": self.decision_time_mean * 1e3,
         }
+        if self.alg1_cost is not None:
+            out["alg1_cost"] = self.alg1_cost
+        if self.exchange is not None:
+            out["exchange"] = self.exchange
+        return out
 
 
 def _make_cache(cfg: SimConfig, hot_ids: np.ndarray, vocab: int | None = None,
@@ -161,9 +187,9 @@ def _make_cache(cfg: SimConfig, hot_ids: np.ndarray, vocab: int | None = None,
             return cls(cfg.n_workers, vocab, cap,
                        policy="lru", sync="eager", part=part)
         return HETCache(cfg.n_workers, vocab, cap,
-                        policy="lru", staleness=cfg.het_staleness)
+                        policy="lru", staleness=cfg.het_staleness, part=part)
     if cfg.mechanism == "fae":
-        return FAECache(cfg.n_workers, vocab, cap, hot_ids)
+        return FAECache(cfg.n_workers, vocab, cap, hot_ids, part=part)
     return cls(cfg.n_workers, vocab, cap, policy=cfg.policy, part=part)
 
 
@@ -186,6 +212,11 @@ def simulate(cfg: SimConfig) -> SimResult:
     bw = cfg.bandwidths if cfg.bandwidths is not None else DEFAULT_BANDWIDTHS(n)
     t_tran = transmission_time(cfg.d_tran, bw)
     rng = np.random.default_rng(cfg.seed)
+    if cfg.cap_slack > 0.0 and cfg.exchange != "ragged":
+        raise ValueError("cap_slack > 0 needs exchange='ragged' (the padded "
+                         "all_to_all requires equal groups)")
+    # ESD per-worker capacity: the hard m cap, relaxed by cap_slack
+    esd_cap = min(k, int(np.ceil(m * (1.0 + cfg.cap_slack))))
 
     # multi-PS: partition the V-space, run caches/ids in the PS-linearized
     # space, and charge ops at the owning shard's link
@@ -193,11 +224,6 @@ def simulate(cfg: SimConfig) -> SimResult:
     part = t_ps = None
     vocab = cfg.workload.vocab
     if use_ps:
-        if cfg.mechanism == "fae" or (cfg.mechanism == "het"
-                                      and cfg.het_staleness > 0):
-            raise ValueError(
-                f"multi-PS accounting is not supported for "
-                f"mechanism={cfg.mechanism!r} (single-PS cache model)")
         part = make_partition(cfg.workload.vocab, cfg.n_ps, cfg.ps_layout)
         bw_ps = (np.asarray(cfg.ps_bandwidths, np.float64)
                  if cfg.ps_bandwidths is not None
@@ -218,11 +244,17 @@ def simulate(cfg: SimConfig) -> SimResult:
             np.random.default_rng(123), 20_000).ravel()
         profile = profile[profile >= 0]
         hot_ids = np.argsort(-np.bincount(profile, minlength=cfg.workload.vocab))
+        if use_ps:
+            # FAE's hot set lives in the same PS-linearized space as ids
+            hot_ids = part.to_linear(hot_ids)
 
     cache = _make_cache(cfg, hot_ids, vocab=vocab, part=part)
     stream = cfg.workload.stream(cfg.seed + 1, k)
 
-    per_iter_cost, per_iter_time, dec_times = [], [], []
+    per_iter_cost, per_iter_time, dec_times, alg1_costs = [], [], [], []
+    exch_acc = ({"mode": cfg.exchange, "payload_bytes": 0, "wire_bytes": 0,
+                 "padded_wire_bytes": 0, "times": []}
+                if cfg.exchange is not None else None)
     hits = lookups = 0
     ingredient = {
         "5Gbps": {"miss_pull": 0, "update_push": 0, "evict_push": 0},
@@ -236,6 +268,7 @@ def simulate(cfg: SimConfig) -> SimResult:
             samples = part.to_linear(samples)
 
         t0 = time.perf_counter()
+        alg1 = None
         if cfg.mechanism == "esd":
             if use_ps:
                 # per-shard link costs: gather state columns at the unique
@@ -253,8 +286,9 @@ def simulate(cfg: SimConfig) -> SimResult:
             else:
                 latest, dirty = cache.snapshot()
                 C = cost_matrix_np(samples, latest, dirty, t_tran)
-            assign = hybrid_dispatch(C, m, cfg.alpha, opt=cfg.opt,
+            assign = hybrid_dispatch(C, esd_cap, cfg.alpha, opt=cfg.opt,
                                      variant=cfg.hybrid_variant)
+            alg1 = float(C[np.arange(k), assign].sum())
         elif cfg.mechanism == "laia":
             assign = laia_dispatch(samples, cache.latest_in_cache, m)
         else:  # het / fae / random all use random dispatch
@@ -275,12 +309,32 @@ def simulate(cfg: SimConfig) -> SimResult:
         else:
             cost = stats.cost(t_tran)
             comm = stats.per_worker_cost(t_tran)
-        iter_time = max(cfg.compute_time_s + comm.max(), dec_t)
+
+        # sample-exchange time from the compiled plan's byte accounting:
+        # ragged ships the bucketed schedule, padded one uniform block
+        exch_t = 0.0
+        if cfg.exchange is not None:
+            plan = compile_plan(assign, n, m,
+                                row_bytes=samples.shape[1] * 4, cap=m)
+            rows_link = (plan.buckets if cfg.exchange == "ragged"
+                         else np.full((n, n), plan.padded_block, np.int64))
+            link_bytes = rows_link * plan.row_bytes
+            per_worker = ((link_bytes.sum(axis=1) + link_bytes.sum(axis=0))
+                          / np.asarray(bw, np.float64))
+            exch_t = float(per_worker.max())
+            if it >= cfg.warmup:
+                exch_acc["payload_bytes"] += plan.stats.payload_bytes
+                exch_acc["wire_bytes"] += int(link_bytes.sum())
+                exch_acc["padded_wire_bytes"] += plan.stats.padded_bytes
+                exch_acc["times"].append(exch_t)
+        iter_time = max(cfg.compute_time_s + comm.max() + exch_t, dec_t)
 
         if it >= cfg.warmup:
             per_iter_cost.append(cost)
             per_iter_time.append(iter_time)
             dec_times.append(dec_t)
+            if alg1 is not None:
+                alg1_costs.append(alg1)
             hits += int(stats.hits.sum())
             lookups += int(stats.lookups.sum())
             for cls, mask in (("5Gbps", fast), ("0.5Gbps", ~fast)):
@@ -290,6 +344,20 @@ def simulate(cfg: SimConfig) -> SimResult:
 
     per_iter_cost = np.asarray(per_iter_cost)
     per_iter_time = np.asarray(per_iter_time)
+    exchange = None
+    if exch_acc is not None:
+        pad = exch_acc["wire_bytes"] - exch_acc["payload_bytes"]
+        pad_base = exch_acc["padded_wire_bytes"] - exch_acc["payload_bytes"]
+        exchange = {
+            "mode": exch_acc["mode"],
+            "payload_bytes": exch_acc["payload_bytes"],
+            "wire_bytes": exch_acc["wire_bytes"],
+            "padded_wire_bytes": exch_acc["padded_wire_bytes"],
+            "pad_bytes": pad,
+            "pad_reduction": (1.0 - pad / pad_base) if pad_base else 0.0,
+            "time_mean_s": float(np.mean(exch_acc["times"]))
+            if exch_acc["times"] else 0.0,
+        }
     return SimResult(
         cost=float(per_iter_cost.sum()),
         itps=float(len(per_iter_time) / per_iter_time.sum()),
@@ -298,4 +366,6 @@ def simulate(cfg: SimConfig) -> SimResult:
         ingredient=ingredient,
         per_iter_cost=per_iter_cost,
         per_iter_time=per_iter_time,
+        alg1_cost=float(np.sum(alg1_costs)) if alg1_costs else None,
+        exchange=exchange,
     )

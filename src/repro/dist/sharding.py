@@ -22,6 +22,7 @@ Entry points (the dry-run/launcher/hillclimb surface):
   cache_specs(cfg, cache, mesh, batch)        decode cache
   data_axes(mesh)                             batch-carrying mesh axes
   zero1_specs(specs, shapes, mesh)            ZeRO-1 optimizer-state shard
+  exchange_specs(mesh)                        ragged-exchange buffer views
   to_shardings(specs, mesh=None)              P tree -> NamedSharding tree
 
 ``model_size`` defaults to the production mesh's 16-wide model axis
@@ -43,7 +44,8 @@ PRODUCTION_MODEL_SIZE = 16
 
 __all__ = [
     "param_specs", "batch_specs", "cache_specs", "data_axes",
-    "zero1_specs", "to_shardings", "PRODUCTION_MODEL_SIZE",
+    "zero1_specs", "to_shardings", "exchange_specs",
+    "PRODUCTION_MODEL_SIZE",
 ]
 
 _M = "model"
@@ -305,6 +307,32 @@ def cache_specs(cfg, cache: Any, mesh: Mesh, global_batch: int):
         return _fit(pattern, leaf.shape, mesh)
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# --------------------------------------------------------------------------
+# ragged-exchange buffers
+# --------------------------------------------------------------------------
+def exchange_specs(mesh: Mesh | None = None):
+    """Specs for the ragged exchange's bucketed buffers as seen OUTSIDE
+    shard_map (repro.exchange.ragged runs inside; these place the global
+    views a driver or test stacks up):
+
+      * ``send`` / ``recv`` — (n_src, n_dst, budget, F) blocks with the
+        source axis over the data axes (each shard owns the blocks it
+        puts on / takes off the wire);
+      * ``counts`` — the (n_src, n_dst) valid-row matrix, source-sharded
+        to match (it is all_gather'd on device, so the global view is
+        replicated after exchange — this spec is the pre-gather layout);
+      * ``out`` — the compacted (k_out, F) batch, row-sharded like any
+        per-sample array.
+    """
+    dp = data_axes(mesh) if mesh is not None else "data"
+    return {
+        "send": P(dp, None, None, None),
+        "recv": P(dp, None, None, None),
+        "counts": P(dp, None),
+        "out": P(dp, None),
+    }
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,14 @@
+"""repro.exchange — dispatch-plan compilation + ragged all-to-all execution.
+
+``plan``   — host-side (numpy) plan compiler: per-link counts, ragged
+             offsets, pow2-bucketed schedule, exact byte accounting.
+``ragged`` — jit executor (shard_map): masked fixed-budget all_to_all
+             with one-pass pack + receiver-side compaction.
+"""
+from .plan import (ExchangePlan, PlanStats, bucket_sizes, compile_plan,
+                   gather_reference)
+from .ragged import compact_recv, pack_send, ragged_exchange
+
+__all__ = ["ExchangePlan", "PlanStats", "bucket_sizes", "compile_plan",
+           "gather_reference", "compact_recv", "pack_send",
+           "ragged_exchange"]

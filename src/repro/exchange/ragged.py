@@ -1,0 +1,109 @@
+"""jit-compatible ragged exchange executor (runs inside shard_map).
+
+The fixed-shape baseline (core.dispatch_tpu.esd_dispatch's padded path)
+ships exactly m/n rows on every (src, dst) link.  This executor ships a
+static per-link ``budget`` of rows instead — sized by the compiled plan
+(repro.exchange.plan) or by the dispatch capacity — with per-destination
+valid *counts* travelling alongside, so receivers mask the pad off and
+compact the payload rows back into a dense batch.  Three stages, all
+traced (no host sync):
+
+  pack_send     rows + assignment -> (n, budget, ...) send blocks in
+                stable source order (optionally via the Pallas one-pass
+                pack kernel, kernels/exchange_pack) + per-dst counts;
+  all_to_all    one fixed-shape collective for the blocks and an
+                all_gather for the (n, n) count matrix;
+  compact_recv  mask each (src -> me) block to its valid prefix and
+                compact the payload rows to the front of the output.
+
+Wire-order contract (shared with plan.py's ``gather_reference``): a
+destination's batch is the concatenation over ascending src of each
+src's rows in their original local order.  With a uniform assignment
+(every count == budget == m/n) every mask is full and each stage is the
+bitwise identity of the padded path's reshape — which is the equivalence
+tests pin.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["pack_send", "compact_recv", "ragged_exchange"]
+
+
+def pack_send(rows, assign, n: int, budget: int, fill: int = -1,
+              use_pallas: bool = False):
+    """Pack local rows into per-destination send blocks.
+
+    rows: (m, ...) payload; assign: (m,) destination in [0, n).
+    Returns (send (n, budget, ...), counts (n,) int32).  Rows keep their
+    original order within each destination block (stable); rows beyond
+    ``budget`` for a destination are dropped (the dispatch capacity must
+    prevent that — callers size budget >= cap).
+    """
+    m = rows.shape[0]
+    assign = assign.astype(jnp.int32)
+    counts = jnp.zeros((n,), jnp.int32).at[assign].add(1, mode="drop")
+    starts = jnp.cumsum(counts) - counts
+    # stable rank of each row within its destination group
+    order = jnp.argsort(assign, stable=True)
+    rank = jnp.zeros((m,), jnp.int32).at[order].set(
+        jnp.arange(m, dtype=jnp.int32))
+    pos = rank - starts[assign]
+    if use_pallas and rows.ndim == 2:
+        from ..kernels.exchange_pack import gather_rows_pallas
+        # overflow rows (pos >= budget) route past the flat buffer and
+        # drop, exactly like the 2-D scatter below — a raw
+        # assign*budget+pos would land them in the NEXT destination's
+        # block
+        slot = jnp.where(pos < budget, assign * budget + pos, n * budget)
+        slot_to_row = jnp.full((n * budget,), -1, jnp.int32).at[slot].set(
+            jnp.arange(m, dtype=jnp.int32), mode="drop")
+        send = gather_rows_pallas(rows, slot_to_row, fill=fill)
+        return send.reshape((n, budget) + rows.shape[1:]), counts
+    send = jnp.full((n, budget) + rows.shape[1:], fill, rows.dtype)
+    send = send.at[assign, pos].set(rows, mode="drop")
+    return send, counts
+
+
+def compact_recv(recv, recv_counts, out_rows: int, fill: int = -1):
+    """Compact the valid prefixes of received blocks into one batch.
+
+    recv: (n, budget, ...) blocks (block i from src i); recv_counts:
+    (n,) valid rows per block.  Returns (out (out_rows, ...) with the
+    payload rows first and ``fill`` after, total () int32).
+    """
+    n, budget = recv.shape[:2]
+    valid = jnp.arange(budget, dtype=jnp.int32)[None, :] < recv_counts[:, None]
+    vflat = valid.reshape(-1)
+    flat = recv.reshape((n * budget,) + recv.shape[2:])
+    dest = jnp.cumsum(vflat.astype(jnp.int32)) - 1
+    out = jnp.full((out_rows,) + recv.shape[2:], fill, recv.dtype)
+    out = out.at[jnp.where(vflat, dest, out_rows)].set(flat, mode="drop")
+    return out, vflat.sum().astype(jnp.int32)
+
+
+def ragged_exchange(rows, assign, axis_name: str, budget: int,
+                    out_rows: int | None = None, fill: int = -1,
+                    use_pallas: bool = False):
+    """One ragged all-to-all step over mesh axis ``axis_name``.
+
+    rows: (m, ...) local payload; assign: (m,) destination worker.
+    ``budget`` is the static per-link block (>= the dispatch capacity);
+    ``out_rows`` sizes the compacted output (default n * budget).
+    Returns (out (out_rows, ...), total () int32 valid rows,
+    recv_counts (n,) rows received per src).
+    """
+    n = lax.psum(1, axis_name)
+    send, counts = pack_send(rows, assign, n, budget, fill=fill,
+                             use_pallas=use_pallas)
+    recv = lax.all_to_all(send, axis_name, 0, 0, tiled=False)
+    counts_mat = lax.all_gather(counts, axis_name)        # (src, dst)
+    me = lax.axis_index(axis_name)
+    recv_counts = lax.dynamic_index_in_dim(
+        counts_mat.T, me, axis=0, keepdims=False)         # (n,) from each src
+    if out_rows is None:
+        out_rows = n * budget
+    out, total = compact_recv(recv, recv_counts, out_rows, fill=fill)
+    return out, total, recv_counts

@@ -1,16 +1,20 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jit wrappers.
 
-  emb_lookup — pooled embedding gather-sum (scalar-prefetch BlockSpec
-               gather); also computes the Alg.-1 cost matrix.
-  auction    — auction bid phase (the TPU analogue of the paper's
-               CUDA-parallel Hungarian; DESIGN.md §2).
-  ops        — public jit'd wrappers; ref — pure-jnp oracles.
+  emb_lookup    — pooled embedding gather-sum (scalar-prefetch BlockSpec
+                  gather); also computes the Alg.-1 cost matrix.
+  auction       — auction bid phase (the TPU analogue of the paper's
+                  CUDA-parallel Hungarian; DESIGN.md §2).
+  exchange_pack — one-pass row pack for the ragged exchange
+                  (repro.exchange.ragged's send-buffer builder).
+  ops           — public jit'd wrappers; ref — pure-jnp oracles.
 """
-from . import auction, emb_lookup, flash_attn, ops, ref
+from . import auction, emb_lookup, exchange_pack, flash_attn, ops, ref
+from .exchange_pack import gather_rows_pallas
 from .flash_attn import flash_attention
 from .ops import (auction_solve_pallas, cost_matrix_pallas,
                   cost_matrix_pallas_sparse)
 
-__all__ = ["auction", "emb_lookup", "flash_attn", "ops", "ref",
-           "auction_solve_pallas", "cost_matrix_pallas",
-           "cost_matrix_pallas_sparse", "flash_attention"]
+__all__ = ["auction", "emb_lookup", "exchange_pack", "flash_attn", "ops",
+           "ref", "auction_solve_pallas", "cost_matrix_pallas",
+           "cost_matrix_pallas_sparse", "flash_attention",
+           "gather_rows_pallas"]

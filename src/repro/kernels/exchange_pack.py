@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: one-pass row pack for the ragged exchange.
+
+The ragged executor (repro.exchange.ragged) turns a dispatch assignment
+into per-destination send blocks.  The data movement is a gather with
+holes: slot ``s`` of the flattened (n * budget, F) send buffer either
+takes row ``slot_to_row[s]`` of the local samples or stays PAD.  This
+kernel streams ``slot_to_row`` through scalar prefetch and lets the
+BlockSpec index_map pick which sample row is DMA'd HBM->VMEM for each
+grid step — the same per-row-DMA shape as kernels/emb_lookup, but
+writing rows instead of pooling them, with PAD slots filled in-register
+(no separate memset pass over the buffer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_E = 128
+
+
+def _kernel(idx_ref, rows_ref, out_ref, *, fill):
+    s = pl.program_id(0)
+    valid = idx_ref[s] >= 0
+    out_ref[...] = jnp.where(valid, rows_ref[...],
+                             jnp.full_like(out_ref, fill))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fill", "block_e", "interpret"))
+def gather_rows_pallas(
+    rows: jnp.ndarray,
+    slot_to_row: jnp.ndarray,
+    *,
+    fill: int = -1,
+    block_e: int = DEFAULT_BLOCK_E,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """out[s] = rows[slot_to_row[s]] where slot_to_row[s] >= 0, else fill.
+
+    rows: (m, F); slot_to_row: (S,) int32 (-1 = PAD slot).  Returns
+    (S, F) in rows.dtype.  ``interpret=None`` auto-selects: compiled on a
+    real TPU backend, interpret mode everywhere else.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, F = rows.shape
+    (S,) = slot_to_row.shape
+    idx = slot_to_row.astype(jnp.int32)
+
+    pad_e = (-F) % block_e
+    src = jnp.pad(rows, ((0, 0), (0, pad_e))) if pad_e else rows
+    Fp = F + pad_e
+    n_e = Fp // block_e
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, fill=fill),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(S, n_e),
+            in_specs=[
+                pl.BlockSpec((1, block_e),
+                             lambda s, e, idx_: (jnp.maximum(idx_[s], 0), e)),
+            ],
+            out_specs=pl.BlockSpec((1, block_e), lambda s, e, idx_: (s, e)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((S, Fp), rows.dtype),
+        interpret=interpret,
+    )(idx, src)
+    return out[:, :F]

@@ -43,6 +43,37 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+def make_esd_exchange(mode: str, n: int, m: int, axis_name: str = "data",
+                      use_pallas: bool = False):
+    """Row-exchange function for the DLRM ESD step (inside shard_map):
+    routes any (m, ...) per-sample array (aux features, labels) to the
+    worker its sample was assigned to.
+
+    ``mode="padded"`` is the fixed m/n all_to_all baseline;
+    ``mode="ragged"`` runs the repro.exchange executor with budget m/n —
+    bitwise-equal output here (the dispatch capacity is the hard m/n
+    split), exercising the ragged wire path end to end in the real
+    train step.
+    """
+    if mode not in ("padded", "ragged"):
+        raise ValueError(f"unknown exchange mode {mode!r}")
+    if mode == "padded":
+        def route(a, assign):
+            order = jnp.argsort(assign, stable=True)
+            routed = a[order].reshape((n, m // n) + a.shape[1:])
+            return jax.lax.all_to_all(routed, axis_name, 0, 0).reshape(
+                (m,) + a.shape[1:])
+    else:
+        from ..exchange.ragged import ragged_exchange
+
+        def route(a, assign):
+            out, _, _ = ragged_exchange(a, assign, axis_name, m // n,
+                                        out_rows=m, use_pallas=use_pallas)
+            return out
+
+    return route
+
+
 # --------------------------------------------------------------------------
 # abstract input specs (dry-run)
 # --------------------------------------------------------------------------

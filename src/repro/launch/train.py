@@ -37,6 +37,7 @@ from ..core.simulator import DEFAULT_BANDWIDTHS, GBPS, hetero_ps_bandwidths
 from ..data.loader import PrefetchLoader
 from ..data.synthetic import WORKLOADS, token_stream
 from ..dist.sharding import param_specs, to_shardings
+from .steps import make_esd_exchange
 from ..models import api, dlrm
 from ..optim import get_optimizer
 from ..ps import make_partition
@@ -97,6 +98,10 @@ def run_dlrm(args):
     params = jax.device_put(params, shardings)
     batch_shd = lambda nd: NamedSharding(mesh, P(*(("data",) + (None,) * (nd - 1))))
 
+    # padded (fixed m/n all_to_all) or ragged (repro.exchange) wire path;
+    # bitwise-equal outputs here since the dispatch capacity stays m/n
+    route = make_esd_exchange(args.exchange, n, m)
+
     def dispatch(esd_state, sparse, dense, labels):
         def shard_fn(s, d, l):
             (s2, d2, l2), _ = esd_dispatch_aux(s, (d, l), esd_state, t_tran,
@@ -114,16 +119,9 @@ def run_dlrm(args):
         )(sparse, dense, labels)
 
     def esd_dispatch_aux(s, aux, state, t, alpha):
-        m_, F = s.shape
-        exch_s, assign = esd_dispatch(s, state, t, alpha, part=part)
-        order = jnp.argsort(assign, stable=True)
-        outs = []
-        for a in aux:
-            routed = a[order].reshape((n, m_ // n) + a.shape[1:])
-            outs.append(
-                jax.lax.all_to_all(routed, "data", 0, 0).reshape(
-                    (m_,) + a.shape[1:]))
-        return (exch_s, *outs), assign
+        exch_s, assign = esd_dispatch(s, state, t, alpha, part=part,
+                                      exchange=args.exchange)
+        return (exch_s, *(route(a, assign) for a in aux)), assign
 
     @partial(jax.jit, donate_argnums=(0, 1))
     def step(params, opt_state, esd_state, sparse, dense, labels):
@@ -245,6 +243,11 @@ def build_parser():
                     default="sparse",
                     help="touched-ids (sparse) or full-plane (dense) "
                          "cost/cache engine")
+    ap.add_argument("--exchange", choices=("padded", "ragged"),
+                    default="padded",
+                    help="sample wire path: fixed m/n all_to_all (padded) "
+                         "or the repro.exchange budgeted executor (ragged; "
+                         "bitwise-equal under the hard m/n capacity)")
     ap.add_argument("--capacity-ratio", type=float, default=0.2)
     ap.add_argument("--n-ps", type=int, default=1,
                     help="partition the embedding V-space over this many "

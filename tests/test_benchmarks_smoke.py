@@ -68,6 +68,28 @@ def test_dispatch_bench_quick_run(tmp_path):
     assert "DISPATCH_BENCH_OK" in res.stdout
 
 
+def test_dispatch_bench_exchange_smoke(tmp_path):
+    """run_exchange quick point: padded vs ragged byte accounting plus the
+    two acceptance properties — pad-byte reduction under Zipf skew and a
+    strictly lower Alg.-1 cost with cap_slack."""
+    out = tmp_path / "exchange.json"
+    res = _run_py(f"""
+        from pathlib import Path
+        from benchmarks.dispatch_bench import run_exchange
+        rep = run_exchange(quick=True, out=Path({str(out)!r}))
+        (r,) = rep["results"]
+        assert r["zipf_a"] == 1.2 and r["n"] == 8
+        assert r["pad_reduction"] >= 0.30, r["pad_reduction"]
+        assert r["alg1_drop"] > 0.0, r["alg1_drop"]
+        assert r["ragged"]["wire_bytes"] <= r["padded"]["wire_bytes"]
+        assert r["ragged"]["payload_bytes"] == r["padded"]["payload_bytes"]
+        assert r["pack_ms"] > 0
+        print("EXCHANGE_BENCH_OK")
+    """)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "EXCHANGE_BENCH_OK" in res.stdout
+
+
 def test_dispatch_bench_multips_smoke(tmp_path):
     """run_multips at toy vocab: the ps sweep runs end-to-end, reports a
     row per (V, n_ps) point, and carries the sub-linearity ratios."""

@@ -353,12 +353,14 @@ class TestPsSimulator:
         assert (rs.per_iter_cost == rd.per_iter_cost).all()
         assert rs.hit_ratio == rd.hit_ratio
 
-    def test_unsupported_mechanisms_raise(self):
-        with pytest.raises(ValueError):
-            simulate(SimConfig(**self._base, n_ps=2, mechanism="fae"))
-        with pytest.raises(ValueError):
-            simulate(SimConfig(**self._base, n_ps=2, mechanism="het",
+    def test_formerly_unsupported_mechanisms_run(self):
+        """FAE / stale-HET used to raise under n_ps > 1; they now carry
+        per-PS accounting (see TestBaselineMultiPs for the breakdowns)."""
+        r = simulate(SimConfig(**self._base, n_ps=2, mechanism="fae"))
+        assert np.isfinite(r.cost)
+        r = simulate(SimConfig(**self._base, n_ps=2, mechanism="het",
                                het_staleness=2))
+        assert np.isfinite(r.cost)
 
 
 class TestPsModelAndSharding:
@@ -425,3 +427,139 @@ class TestPsModelAndSharding:
         assert len(metrics) == 2
         assert all(np.isfinite(m["loss"]) for m in metrics)
         assert metrics[0]["cost"] > 0
+
+
+class TestPerPsCapacity:
+    """Per-PS worker cache budgets (capacity_ps) in both sparse engines."""
+
+    def _ids_batch(self, rng, part, n, L):
+        ids = np.full((n, L), -1, np.int32)
+        for j in range(n):
+            u = np.unique(part.to_linear(rng.integers(0, part.vocab, L)))
+            ids[j, :len(u)] = u
+        return ids
+
+    def test_state_update_seq_len1_bitwise_int(self, rng):
+        """capacity=[c] at n_ps=1 is bitwise the plain-int path."""
+        n, V, L, cap = 3, 64, 8, 10
+        part = make_partition(V, 1)
+        s_int = esd_sparse_init(n, V, cap, max_ids=L)
+        s_seq = esd_sparse_init(n, V, [cap], max_ids=L)
+        for _ in range(6):
+            ids = jnp.asarray(self._ids_batch(rng, part, n, L))
+            s_int, c_int = esd_state_update_sparse(s_int, ids, cap, part)
+            s_seq, c_seq = esd_state_update_sparse(s_seq, ids, [cap], part)
+            for key in ("miss_pull", "update_push", "evict_push"):
+                np.testing.assert_array_equal(np.asarray(c_int[key]),
+                                              np.asarray(c_seq[key]))
+        np.testing.assert_array_equal(np.asarray(s_int.latest),
+                                      np.asarray(s_seq.latest))
+        np.testing.assert_array_equal(np.asarray(s_int.dirty),
+                                      np.asarray(s_seq.dirty))
+        np.testing.assert_array_equal(np.sort(np.asarray(s_int.slots)),
+                                      np.sort(np.asarray(s_seq.slots)))
+
+    def test_state_update_budgets_respected(self, rng):
+        n, V, L = 3, 64, 8
+        caps = [6, 3]
+        part = make_partition(V, 2)
+        s = esd_sparse_init(n, part.linear_size, caps, max_ids=L)
+        for _ in range(10):
+            ids = jnp.asarray(self._ids_batch(rng, part, n, L))
+            s, c = esd_state_update_sparse(s, ids, caps, part)
+        lat = np.asarray(s.latest)
+        need = np.asarray(ids)
+        for j in range(n):
+            res = np.where(lat[j])[0]
+            cnt = np.bincount(np.asarray(part.shard_of_linear(res)),
+                              minlength=2)
+            pinned = need[j][need[j] >= 0]
+            pin_cnt = np.bincount(np.asarray(part.shard_of_linear(pinned)),
+                                  minlength=2)
+            # budget + this step's pinned ids bound the resident set
+            assert (cnt <= np.asarray(caps) + pin_cnt).all(), (cnt, pin_cnt)
+        np.testing.assert_array_equal(
+            np.asarray(c["evict_push_ps"]).sum(axis=1),
+            np.asarray(c["evict_push"]))
+
+    def test_state_update_seq_errors(self, rng):
+        n, V, L = 2, 32, 4
+        part = make_partition(V, 2)
+        s = esd_sparse_init(n, part.linear_size, [4, 4], max_ids=L)
+        ids = jnp.asarray(self._ids_batch(rng, part, n, L))
+        with pytest.raises(ValueError, match="part"):
+            esd_state_update_sparse(s, ids, [4, 4])        # no part
+        with pytest.raises(ValueError, match="entries"):
+            esd_state_update_sparse(s, ids, [4, 4, 4], part)
+        small = esd_sparse_init(n, part.linear_size, [2, 2], max_ids=L)
+        with pytest.raises(ValueError, match="slot buffer"):
+            esd_state_update_sparse(small, ids, [4, 4], part)
+
+    def test_cluster_cache_budgets(self, rng):
+        n, V = 3, 80
+        part = make_partition(V, 2)
+        caps = [10, 7]
+        c = SparseClusterCache(n, part.linear_size, caps, policy="lru",
+                               part=part)
+        for _ in range(12):
+            batches = [np.unique(part.to_linear(
+                rng.integers(0, V, 7))) for _ in range(n)]
+            st = c.step(batches)
+        for j in range(n):
+            res = np.where(c.present[j])[0]
+            cnt = np.bincount(np.asarray(part.shard_of_linear(res)),
+                              minlength=2)
+            assert (cnt <= np.asarray(caps)).all(), cnt
+        np.testing.assert_array_equal(st.evict_push_ps.sum(axis=1),
+                                      st.evict_push)
+        # prefill respects per-shard budgets
+        hot = part.to_linear(np.argsort(rng.random(V)))
+        c.prefill(hot)
+        for j in range(n):
+            cnt = np.bincount(np.asarray(part.shard_of_linear(
+                np.where(c.present[j])[0])), minlength=2)
+            assert (cnt <= np.asarray(caps)).all()
+
+    def test_cluster_cache_rejects(self):
+        part = make_partition(40, 2)
+        with pytest.raises(ValueError, match="Sparse"):
+            ClusterCache(2, part.linear_size, [5, 5], part=part)
+        with pytest.raises(ValueError, match="n_ps"):
+            SparseClusterCache(2, part.linear_size, [5, 5, 5], part=part)
+        with pytest.raises(ValueError, match="n_ps"):
+            SparseClusterCache(2, 40, [5, 5])              # no part
+
+
+class TestBaselineMultiPs:
+    """FAE / stale-HET per-PS accounting (SimConfig no longer rejects)."""
+
+    @pytest.mark.parametrize("mech,kw", [("fae", {}),
+                                         ("het", {"het_staleness": 2})])
+    def test_simulator_accepts(self, mech, kw):
+        cfg = SimConfig(workload=WORKLOADS["tiny"], n_workers=4,
+                        batch_per_worker=8, iters=6, warmup=2,
+                        mechanism=mech, n_ps=2,
+                        ps_bandwidths=hetero_ps_bandwidths(4, 2), **kw)
+        r = simulate(cfg)
+        assert np.isfinite(r.cost) and r.cost > 0
+
+    @pytest.mark.parametrize("mech,kw", [("fae", {}),
+                                         ("het", {"het_staleness": 2})])
+    def test_ps_rows_sum_to_totals(self, mech, kw, rng):
+        from repro.core.baselines import FAECache, HETCache
+
+        V = 60
+        part = make_partition(V, 3)
+        if mech == "fae":
+            hot = part.to_linear(np.argsort(rng.random(V)))
+            cache = FAECache(3, part.linear_size, 20, hot, part=part)
+        else:
+            cache = HETCache(3, part.linear_size, 20, policy="lru",
+                             staleness=kw["het_staleness"], part=part)
+        for _ in range(5):
+            batches = [np.unique(part.to_linear(
+                rng.integers(0, V, 10))) for _ in range(3)]
+            st = cache.step(batches)
+            for op in ("miss_pull", "update_push", "evict_push"):
+                np.testing.assert_array_equal(
+                    getattr(st, op + "_ps").sum(axis=1), getattr(st, op))
