@@ -1,0 +1,157 @@
+"""Pipeline benchmark: decision hiding + lookahead window dedup.
+
+Two sweeps over a Zipf-1.2 CTR stream (the skew regime the paper's
+workloads live in), written to benchmarks/results/BENCH_pipeline.json:
+
+  * ``depth`` — synchronous (pipeline_depth=1) vs pipelined (depth=2)
+    ESD simulation with the dispatch decision *comparable to* the
+    training stage (the regime where hiding matters): per-iteration time
+    must land at ~max(train_stage, decision) instead of their sum, and
+    the end-to-end ItpS speedup must clear 1.2x.
+
+  * ``lookahead`` — miss-op reduction as the window W grows: the W-batch
+    dedup window shields soon-reused latest copies from eviction
+    (Belady-graded, core.cache ``protect=``), so the cache engine itself
+    reports fewer miss pulls; the sweep records the monotone drop and
+    the window's dedup fraction.
+
+Plus a ``runner`` smoke: the jitted decide/advance/train stages of the
+real train driver at depth 1 vs 2 on this host (one CPU device — the
+numbers show overhead parity, not overlap; true overlap needs parallel
+device streams).
+
+``--quick`` runs a reduced sweep into BENCH_pipeline_quick.json
+(untracked) so CI smoke never clobbers the tracked record.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import SimConfig, simulate
+from repro.data.synthetic import CTRWorkload
+
+RESULTS = Path(__file__).parent / "results"
+
+
+def _workload(a: float = 1.2) -> CTRWorkload:
+    return CTRWorkload(name=f"zipf{a}", model="wdl",
+                       table_sizes=(50_000,) * 4 + (1_000,) * 8,
+                       zipf_a=(a,) * 12, hist_max=8, hist_mean=4.0)
+
+
+def bench_depth(iters: int, m: int = 128, alpha: float = 0.25) -> dict:
+    """Synchronous vs pipelined step time with the decision stage sized
+    comparable to the training stage (compute_time ~ calibrated Table-2
+    decision latency at this m*alpha)."""
+    from repro.core.simulator import calibrated_decision_time
+
+    wl = _workload()
+    dec = calibrated_decision_time(m, alpha)
+    base = dict(workload=wl, n_workers=8, batch_per_worker=m,
+                cache_ratio=0.02, iters=iters, warmup=max(2, iters // 5),
+                mechanism="esd", alpha=alpha, compute_time_s=dec)
+    sync = simulate(SimConfig(pipeline_depth=1, **base))
+    pipe = simulate(SimConfig(pipeline_depth=2, **base))
+    # the pipelined per-iteration time vs the ideal max(train, decision)
+    ideal = np.maximum(
+        pipe.pipeline["train_stage_mean_s"],
+        pipe.pipeline["decision_stage_mean_s"])
+    return {
+        "m": m, "alpha": alpha, "decision_s": dec,
+        "sync_itps": sync.itps, "pipe_itps": pipe.itps,
+        "speedup": pipe.itps / sync.itps,
+        "pipe_iter_mean_s": float(np.mean(pipe.per_iter_time)),
+        "ideal_max_s": float(ideal),
+        "hidden_ratio": float(np.mean(pipe.per_iter_time)) / float(
+            np.mean(sync.per_iter_time)),
+    }
+
+
+def bench_lookahead(iters: int, windows=(0, 2, 4, 8)) -> dict:
+    """Miss-op reduction vs window size under Zipf 1.2 (tight LRU cache,
+    eviction pressure — where the shield can act)."""
+    wl = _workload()
+    base = dict(workload=wl, n_workers=8, batch_per_worker=64,
+                cache_ratio=0.005, iters=iters, warmup=max(2, iters // 5),
+                mechanism="esd", alpha=0.0, policy="lru")
+    rows = []
+    for W in windows:
+        r = simulate(SimConfig(lookahead=W, **base))
+        p = r.pipeline
+        rows.append({
+            "W": W,
+            "miss_pull": p["miss_pull_total"],
+            "cost": r.cost,
+            "hit_ratio": r.hit_ratio,
+            "dedup_frac": (p["dedup_saved_ops"]
+                           / max(p["dedup_total_touches"], 1)),
+        })
+    base_miss = max(rows[0]["miss_pull"], 1)
+    for row in rows:
+        row["miss_reduction"] = 1.0 - row["miss_pull"] / base_miss
+    return {"windows": list(windows), "rows": rows,
+            "monotone": all(rows[i + 1]["miss_pull"] <= rows[i]["miss_pull"]
+                            for i in range(len(rows) - 1))}
+
+
+def bench_runner(steps: int = 6) -> dict:
+    """Wall-clock smoke of the real jitted stage pipeline (train driver)
+    at depth 1 vs 2 — overhead parity on one CPU device."""
+    from repro.launch.train import main
+
+    res = {}
+    for depth in (1, 2):
+        t0 = time.perf_counter()
+        metrics = main(["--arch", "wdl-tiny", "--steps", str(steps),
+                        "--batch-per-worker", "16", "--esd-alpha", "0",
+                        "--pipeline-depth", str(depth)])
+        res[f"depth{depth}"] = {
+            "wall_s": time.perf_counter() - t0,
+            "final_loss": metrics[-1]["loss"],
+        }
+    res["bitwise_equal"] = (res["depth1"]["final_loss"]
+                            == res["depth2"]["final_loss"])
+    return res
+
+
+def run(quick: bool = False, out: Path | None = None) -> dict:
+    if out is None:
+        out = RESULTS / ("BENCH_pipeline_quick.json" if quick
+                         else "BENCH_pipeline.json")
+    iters = 12 if quick else 40
+    # full run: the paper's alpha=1 regime (decision ~ a full train step,
+    # the strongest hiding case); quick: alpha=0.5 keeps the host-side
+    # solver cheap while still clearing the 1.2x bar
+    report = {
+        "config": {"zipf_a": 1.2, "iters": iters},
+        "depth": bench_depth(iters, alpha=0.5 if quick else 1.0),
+        "lookahead": bench_lookahead(iters,
+                                     windows=(0, 4) if quick else (0, 2, 4, 8)),
+    }
+    if not quick:
+        report["runner"] = bench_runner()
+    d = report["depth"]
+    print(f"pipeline.depth,{d['speedup'] * 100:.0f},"
+          f"speedup={d['speedup']:.2f}x,"
+          f"iter={d['pipe_iter_mean_s'] * 1e3:.1f}ms,"
+          f"ideal_max={d['ideal_max_s'] * 1e3:.1f}ms")
+    for row in report["lookahead"]["rows"]:
+        print(f"pipeline.W{row['W']},{row['miss_pull']},"
+              f"miss_red={row['miss_reduction']:.2%},"
+              f"dedup={row['dedup_frac']:.2f}")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -65,7 +65,7 @@ class HETCache(ClusterCache):
         self.lag = np.zeros((self.n, self.V), np.int32)
         self.dirty_cnt = np.zeros((self.n, self.V), np.int32)
 
-    def step(self, batches) -> IterStats:
+    def step(self, batches, protect=None) -> IterStats:
         n, V = self.n, self.V
         self.it += 1
         need = np.zeros((n, V), bool)
@@ -111,7 +111,8 @@ class HETCache(ClusterCache):
                 free = self.capacity - int(self.present[j].sum())
                 overflow = len(new_ids) - free
                 if overflow > 0:
-                    victims = self._pick_victims(j, need[j], overflow)
+                    victims = self._pick_victims(j, need[j], overflow,
+                                                 protect=protect)
                     vdirty = victims[self.dirty[j, victims]]
                     stats.evict_push[j] += len(vdirty)
                     if self.part is not None:
@@ -167,7 +168,9 @@ class FAECache:
     def _ps_count(self, ids) -> np.ndarray:
         return ps_op_count(self.part, ids)
 
-    def step(self, batches) -> IterStats:
+    def step(self, batches, protect=None) -> IterStats:
+        # protect is accepted for interface parity; FAE's hot set is
+        # static (replicated, never evicted), so the shield is a no-op
         n = self.n
         stats = IterStats(
             miss_pull=np.zeros(n, np.int64),

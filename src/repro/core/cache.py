@@ -21,6 +21,14 @@ Eviction policies: ``emark`` (§8.1: outdated first, then mark epoch, then
 frequency), ``lru``, ``lfu``.  Ids needed by the current iteration are
 pinned and never evicted.
 
+Lookahead protection (``step(..., protect=ids)``): the pipeline's
+sliding window (repro.pipeline.window) knows which ids the next W
+batches touch; passing them as ``protect`` makes the victim scan prefer
+unprotected entries — a *soft* shield (protected ids are still evicted
+when nothing else is left, so capacity pressure never fails), which is
+how window dedup turns into fewer miss pulls under skew.  ``protect=None``
+(default) is the unchanged bitwise path.
+
 Two engines:
   * :class:`ClusterCache` — dense reference: (n, V) boolean-plane algebra,
     O(n*V) per iteration.
@@ -176,8 +184,14 @@ class ClusterCache:
                 self.dirty[:, uids])
 
     # -- one BSP iteration ---------------------------------------------------
-    def step(self, batches: Sequence[np.ndarray]) -> IterStats:
-        """Run one iteration; ``batches[j]`` = unique ids needed by worker j."""
+    def step(self, batches: Sequence[np.ndarray],
+             protect: "np.ndarray | tuple | None" = None) -> IterStats:
+        """Run one iteration; ``batches[j]`` = unique ids needed by worker j.
+
+        ``protect``: optional lookahead shield the victim scan evicts
+        last — either a sorted id array or a ``(sorted_ids, next_use)``
+        pair (what the simulator passes from the window metadata; the
+        grading is described on ``_select_victims``)."""
         n, V = self.n, self.V
         self.it += 1
         need = np.zeros((n, V), bool)
@@ -238,7 +252,8 @@ class ClusterCache:
                 free = self.capacity - int(self.present[j].sum())
                 overflow = len(new_ids) - free
                 if overflow > 0:
-                    victims = self._pick_victims(j, need[j], overflow)
+                    victims = self._pick_victims(j, need[j], overflow,
+                                                 protect=protect)
                     vdirty = victims[self.dirty[j, victims]]
                     stats.evict_push[j] += len(vdirty)
                     if self.part is not None:
@@ -277,21 +292,53 @@ class ClusterCache:
         return ps_op_count(self.part, ids)
 
     # -- eviction ------------------------------------------------------------
-    def _pick_victims(self, j: int, pinned: np.ndarray, count: int) -> np.ndarray:
+    def _pick_victims(self, j: int, pinned: np.ndarray, count: int,
+                      protect: "np.ndarray | tuple | None" = None
+                      ) -> np.ndarray:
         cand = np.where(self.present[j] & ~pinned)[0]
         resident = np.where(self.present[j])[0]
-        return self._select_victims(j, cand, resident, count)
+        return self._select_victims(j, cand, resident, count, protect=protect)
 
     def _select_victims(self, j: int, cand: np.ndarray, resident: np.ndarray,
-                        count: int) -> np.ndarray:
+                        count: int,
+                        protect: "np.ndarray | tuple | None" = None
+                        ) -> np.ndarray:
         """Shared victim-selection core (dense + sparse engines): cand must
-        be sorted ascending so argpartition tie-breaks are engine-invariant."""
+        be sorted ascending so argpartition tie-breaks are engine-invariant.
+
+        ``protect`` applies the soft lookahead shield — either a sorted id
+        array (uniform shield) or a ``(sorted_ids, next_use)`` pair from
+        the window metadata.  A key shift puts every protected candidate
+        after every unprotected one while preserving the within-class
+        policy order, so protected ids are evicted only once the
+        unprotected pool is exhausted; with ``next_use`` distances the
+        shield grades Belady-style — among protected candidates the one
+        reused *farthest* in the future goes first, so a longer window
+        strictly refines the decision instead of flattening it.  Only
+        *latest* resident copies earn the shield — a stale copy of a
+        soon-reused id misses on its next use regardless, so keeping it
+        over a cold entry buys nothing."""
         if len(cand) < count:
             raise RuntimeError(
                 f"worker {j}: cannot evict {count} of {len(cand)} candidates "
                 "(capacity too small for one batch)"
             )
         key = self._evict_key(j, cand)
+        p_ids, p_next = (protect if isinstance(protect, tuple)
+                         else (protect, None))
+        if p_ids is not None and len(p_ids) and len(cand):
+            pos = np.minimum(np.searchsorted(p_ids, cand), len(p_ids) - 1)
+            shielded = (p_ids[pos] == cand) & self.latest[j, cand]
+            if shielded.any():
+                off = float(key.max() - key.min()) + 1.0
+                if p_next is None:
+                    key = key + shielded * off
+                else:
+                    # urgency in [1, W]: next use in the very next batch
+                    # shifts the most, the window's far edge the least
+                    W = int(p_next.max()) + 1 if len(p_next) else 1
+                    key = key + np.where(shielded,
+                                         (W - p_next[pos]) * off, 0.0)
         victims = cand[np.argpartition(key, count - 1)[:count]]
         if self.policy == "emark":
             # Emark epoch bump: when every cached mark equals target, target+=1
@@ -356,7 +403,8 @@ class SparseClusterCache(ClusterCache):
                                  for _ in range(self.n)]
 
     # -- one BSP iteration ---------------------------------------------------
-    def step(self, batches: Sequence[np.ndarray]) -> IterStats:
+    def step(self, batches: Sequence[np.ndarray],
+             protect: "np.ndarray | tuple | None" = None) -> IterStats:
         n = self.n
         self.it += 1
         # dense `step` scatters batches into a bool plane, which both
@@ -430,7 +478,7 @@ class SparseClusterCache(ClusterCache):
             self.latest[j, resident_stale] = True
             new_ids = miss_ids[~self.present[j, miss_ids]]
             if len(new_ids):
-                self._admit(j, ids, new_ids, stats)
+                self._admit(j, ids, new_ids, stats, protect=protect)
 
         # ---- Phase C: train ------------------------------------------------
         for j in range(n):
@@ -452,7 +500,8 @@ class SparseClusterCache(ClusterCache):
 
     # -- admission (+ bounded-candidate evictions) ---------------------------
     def _admit(self, j: int, pinned_ids: np.ndarray, new_ids: np.ndarray,
-               stats: IterStats):
+               stats: IterStats,
+               protect: "np.ndarray | tuple | None" = None):
         """Insert ``new_ids`` into worker j's cache, evicting per budget.
 
         With a single capacity this is one admission over the whole set
@@ -476,7 +525,7 @@ class SparseClusterCache(ClusterCache):
             overflow = len(ids_p) - free
             if overflow > 0:
                 victims = self._pick_victims_sparse(j, pinned_ids, overflow,
-                                                    shard=p)
+                                                    shard=p, protect=protect)
                 vdirty = victims[self.dirty[j, victims]]
                 stats.evict_push[j] += len(vdirty)
                 if self.part is not None:
@@ -498,7 +547,9 @@ class SparseClusterCache(ClusterCache):
                 self._resident_ps[j][p].update(ids_p.tolist())
 
     def _pick_victims_sparse(self, j: int, pinned_ids: np.ndarray,
-                             count: int, shard: int | None = None) -> np.ndarray:
+                             count: int, shard: int | None = None,
+                             protect: "np.ndarray | tuple | None" = None
+                             ) -> np.ndarray:
         # sorted ascending so keys (and argpartition tie-breaks) line up
         # exactly with the dense engine's np.where scan order
         pool = (self._resident[j] if shard is None
@@ -509,7 +560,7 @@ class SparseClusterCache(ClusterCache):
         # the Emark epoch bump ranges over the whole cache either way
         resident = np.fromiter(self._resident[j], np.int64,
                                len(self._resident[j]))
-        return self._select_victims(j, cand, resident, count)
+        return self._select_victims(j, cand, resident, count, protect=protect)
 
     # -- warm start ----------------------------------------------------------
     def prefill(self, hot_ids: np.ndarray):

@@ -64,11 +64,12 @@ from .auction import _repair, _round_body
 from .cost import (cost_matrix_jnp, cost_matrix_sparse_jnp,
                    cost_matrix_sparse_ps_jnp)
 
-__all__ = ["EsdState", "esd_init", "esd_dispatch", "esd_state_update",
-           "SparseEsdState", "esd_sparse_init", "esd_state_update_sparse",
-           "need_ids_list", "need_ids_local", "heu_dispatch_jax",
-           "auction_fixed", "hybrid_dispatch_jax", "dispatch_cap",
-           "exchange_budget"]
+__all__ = ["EsdState", "esd_init", "esd_cost_matrix", "esd_decide",
+           "esd_dispatch",
+           "esd_state_update", "SparseEsdState", "esd_sparse_init",
+           "esd_state_update_sparse", "need_ids_list", "need_ids_local",
+           "heu_dispatch_jax", "auction_fixed", "hybrid_dispatch_jax",
+           "dispatch_cap", "exchange_budget"]
 
 
 # --------------------------------------------------------------------------
@@ -557,6 +558,52 @@ def exchange_budget(cap: int, m: int) -> int:
     return min(m, 1 << max(cap - 1, 0).bit_length())
 
 
+def esd_cost_matrix(samples, state, t_tran, use_pallas: bool = False,
+                    sparse_cost: bool = True, part=None):
+    """This shard's (m, n) Alg. 1 cost matrix under ``state`` — the
+    branch selection shared by :func:`esd_decide` and the pipeline's
+    commit-time re-score (``repro.pipeline``: score a *stale* decision
+    against the state it actually committed on)."""
+    if part is not None and part.n_ps > 1:
+        if use_pallas:
+            _warn_pallas_ps_fallback()
+        return cost_matrix_sparse_ps_jnp(samples, state.latest, state.dirty,
+                                         t_tran, part, linear=True)
+    if use_pallas:
+        from ..kernels.ops import cost_matrix_pallas, cost_matrix_pallas_sparse
+        kern = cost_matrix_pallas_sparse if sparse_cost else cost_matrix_pallas
+        return kern(samples, state.latest, state.dirty, t_tran)
+    fn = cost_matrix_sparse_jnp if sparse_cost else cost_matrix_jnp
+    return fn(samples, state.latest, state.dirty, t_tran)
+
+
+def esd_decide(samples, state, t_tran, alpha: float,
+               axis_name: str = "data", use_pallas: bool = False,
+               sparse_cost: bool = True, part=None,
+               cap_slack: float = 0.0, with_cost: bool = False):
+    """The decision half of :func:`esd_dispatch`: Alg. 1 cost matrix +
+    hybrid assignment, no wire movement.
+
+    Factored out so the pipelined executor (``repro.pipeline.runner``)
+    can run the decision for step t+1 as its own jitted stage while step
+    t trains.  Returns ``assign`` (m,) int32, or ``(assign, alg1)`` with
+    ``with_cost`` — ``alg1`` is this shard's Alg.-1 objective of the
+    chosen assignment (sum of C[i, assign[i]]), the number a stale
+    decision's commit-time correction re-scores.
+    """
+    m, F = samples.shape
+    # constant-folds to the static mesh axis size at trace time
+    n = jax.lax.psum(1, axis_name)
+    C = esd_cost_matrix(samples, state, t_tran, use_pallas=use_pallas,
+                        sparse_cost=sparse_cost, part=part)
+    cap = dispatch_cap(m, n, cap_slack)
+    assign = hybrid_dispatch_jax(C, m, alpha, cap=cap)
+    if with_cost:
+        alg1 = jnp.take_along_axis(C, assign[:, None], axis=1)[:, 0].sum()
+        return assign, alg1
+    return assign
+
+
 def esd_dispatch(samples, state, t_tran, alpha: float,
                  axis_name: str = "data", use_pallas: bool = False,
                  sparse_cost: bool = True, part=None,
@@ -600,20 +647,10 @@ def esd_dispatch(samples, state, t_tran, alpha: float,
     # constant-folds to the static mesh axis size at trace time
     # (jax.lax.axis_size is not available on this jax version)
     n = jax.lax.psum(1, axis_name)
-    if part is not None and part.n_ps > 1:
-        if use_pallas:
-            _warn_pallas_ps_fallback()
-        C = cost_matrix_sparse_ps_jnp(samples, state.latest, state.dirty,
-                                      t_tran, part, linear=True)
-    elif use_pallas:
-        from ..kernels.ops import cost_matrix_pallas, cost_matrix_pallas_sparse
-        kern = cost_matrix_pallas_sparse if sparse_cost else cost_matrix_pallas
-        C = kern(samples, state.latest, state.dirty, t_tran)
-    else:
-        fn = cost_matrix_sparse_jnp if sparse_cost else cost_matrix_jnp
-        C = fn(samples, state.latest, state.dirty, t_tran)
+    assign = esd_decide(samples, state, t_tran, alpha, axis_name=axis_name,
+                        use_pallas=use_pallas, sparse_cost=sparse_cost,
+                        part=part, cap_slack=cap_slack)
     cap = dispatch_cap(m, n, cap_slack)
-    assign = hybrid_dispatch_jax(C, m, alpha, cap=cap)
     if exchange == "ragged":
         from ..exchange.ragged import ragged_exchange
         budget = cap if cap_slack <= 0.0 else exchange_budget(cap, m)

@@ -4,13 +4,24 @@ Drives the cache state machine with a chosen dispatch mechanism over a
 synthetic CTR stream and accounts the paper's metrics:
 
   * total embedding transmission Cost  (Eq. 3, heterogeneous T_j)
-  * Iterations-per-Second (ItpS): per-iteration wall time modeled as
+  * Iterations-per-Second (ItpS): with the decision pipelined
+    (``pipeline_depth >= 2``, the paper's setup and the default),
+    per-iteration wall time is
       max(compute_time + max_j comm_time_j,  decision_time)
     because ESD hides the decision for iteration t+1 under iteration t —
     once the decision takes longer than an iteration, it becomes the
-    bottleneck (paper §6.5 batch-size analysis).
+    bottleneck (paper §6.5 batch-size analysis).  ``pipeline_depth = 1``
+    models the synchronous loop instead: the two stages *sum*, which is
+    what the repro.pipeline runner removes.
   * hit ratio, and the miss-pull/update-push/evict-push ingredient split
     per bandwidth class (Fig. 5).
+
+Lookahead (``SimConfig.lookahead = W > 0``): the batch stream is wrapped
+in repro.pipeline.window.LookaheadWindow, and the ids the next W batches
+touch become a soft eviction shield (``cache.step(..., protect=)``) —
+window dedup turns into real miss-op reduction exactly as the cache
+engine reports it, no analytic discount.  ``SimResult.pipeline`` carries
+the stage breakdown and the window's dedup accounting.
 
 Decision time: "calibrated" (default) interpolates the paper's Table 2
 GPU-parallel Hungarian latencies — we are simulating their testbed, and
@@ -41,7 +52,10 @@ worker sample exchange the dispatch implies, using the compiled plan's
 exact byte accounting (repro.exchange.plan): the padded baseline ships
 one uniform block per link (the max per-link count), the ragged path
 ships the pow2-bucketed schedule — so comm time follows planned bytes,
-not worst-case padding.  ``cap_slack > 0`` relaxes ESD's per-worker
+not worst-case padding.  Each (src, dst) link is priced individually at
+the slower end's bandwidth (an edge transfer cannot outrun either NIC),
+a worker's wall time serializes its own sends and receives, and the
+self-link (src == dst) is a local copy that costs no wire time.  ``cap_slack > 0`` relaxes ESD's per-worker
 capacity past m (feasible under the ragged exchange), which strictly
 lowers the Alg.-1 objective (``SimResult.alg1_cost``) under skew.
 ``exchange=None`` (default) keeps the pre-exchange accounting bitwise.
@@ -65,7 +79,7 @@ from .cost import (batch_unique_np, cost_from_state_cols,
 from .hybrid import hybrid_dispatch
 
 __all__ = ["SimConfig", "SimResult", "simulate", "DEFAULT_BANDWIDTHS",
-           "hetero_ps_bandwidths"]
+           "hetero_ps_bandwidths", "exchange_worker_times"]
 
 GBPS = 1e9 / 8  # bytes per second per Gbps
 
@@ -84,6 +98,22 @@ def hetero_ps_bandwidths(n: int, n_ps: int, fast_gbps: float = 5.0,
     bw = np.full((n, n_ps), fast_gbps * GBPS)
     bw[:, -1] = slow_gbps * GBPS
     return bw
+
+
+def exchange_worker_times(link_bytes: np.ndarray,
+                          bw: np.ndarray) -> np.ndarray:
+    """(n,) per-worker wall time of one sample-exchange step.
+
+    ``link_bytes[i, j]`` = wire bytes on the ordered (src, dst) link;
+    each link is priced at the slower end's bandwidth (a transfer cannot
+    outrun either NIC), a worker serializes its own sends and receives,
+    and the self-link (i == j) is a local copy that costs no wire time.
+    """
+    bw = np.asarray(bw, np.float64)
+    link_t = np.asarray(link_bytes, np.float64) / np.minimum(
+        bw[:, None], bw[None, :])
+    np.fill_diagonal(link_t, 0.0)
+    return link_t.sum(axis=1) + link_t.sum(axis=0)
 
 
 @dataclasses.dataclass
@@ -119,6 +149,14 @@ class SimConfig:
     # capacity by that fraction of m (needs exchange="ragged").
     exchange: Literal["padded", "ragged"] | None = None
     cap_slack: float = 0.0
+    # dispatch pipelining: depth >= 2 (default, the paper's setup) hides
+    # the decision for t+1 under iteration t, so the stages take the max;
+    # depth == 1 is the synchronous loop (stages sum).  lookahead = W > 0
+    # additionally runs a W-batch dedup window over the stream whose
+    # touched ids shield soon-reused cache entries from eviction
+    # (repro.pipeline.window); W = 0 keeps the cache bitwise.
+    pipeline_depth: int = 2
+    lookahead: int = 0
 
     @property
     def d_tran(self) -> float:
@@ -160,6 +198,8 @@ class SimResult:
     alg1_cost: float | None = None
     # sample-exchange byte/time accounting (SimConfig.exchange set)
     exchange: dict | None = None
+    # stage breakdown + lookahead-window dedup accounting (always set)
+    pipeline: dict | None = None
 
     def summary(self) -> dict:
         out = {
@@ -172,6 +212,9 @@ class SimResult:
             out["alg1_cost"] = self.alg1_cost
         if self.exchange is not None:
             out["exchange"] = self.exchange
+        if self.pipeline is not None and (
+                self.pipeline["depth"] == 1 or self.pipeline["lookahead"]):
+            out["pipeline"] = self.pipeline
         return out
 
 
@@ -248,10 +291,17 @@ def simulate(cfg: SimConfig) -> SimResult:
             # FAE's hot set lives in the same PS-linearized space as ids
             hot_ids = part.to_linear(hot_ids)
 
+    if cfg.pipeline_depth < 1:
+        raise ValueError(f"pipeline_depth must be >= 1, got "
+                         f"{cfg.pipeline_depth}")
     cache = _make_cache(cfg, hot_ids, vocab=vocab, part=part)
     stream = cfg.workload.stream(cfg.seed + 1, k)
+    if cfg.lookahead > 0:
+        from ..pipeline.window import LookaheadWindow
+        stream = LookaheadWindow(stream, cfg.lookahead, key=lambda b: b[0])
 
     per_iter_cost, per_iter_time, dec_times, alg1_costs = [], [], [], []
+    train_stage_times, dedup_saved, dedup_touches = [], 0, 0
     exch_acc = ({"mode": cfg.exchange, "payload_bytes": 0, "wire_bytes": 0,
                  "padded_wire_bytes": 0, "times": []}
                 if cfg.exchange is not None else None)
@@ -263,7 +313,22 @@ def simulate(cfg: SimConfig) -> SimResult:
     fast = bw >= np.median(bw)
 
     for it in range(cfg.iters):
-        samples, _, _ = next(stream)
+        protect = None
+        if cfg.lookahead > 0:
+            (samples, _, _), wmeta = next(stream)
+            # soft eviction shield: every id the next W batches touch,
+            # graded by how soon (Belady-style; cache._select_victims)
+            p_ids, p_next = wmeta.uids, wmeta.first_use
+            if use_ps:
+                p_ids = part.to_linear(p_ids)
+                order = np.argsort(p_ids)     # hashed layouts unsort
+                p_ids, p_next = p_ids[order], p_next[order]
+            protect = (p_ids, p_next)
+            if it >= cfg.warmup:
+                dedup_saved += wmeta.dedup_saved
+                dedup_touches += wmeta.total_touches
+        else:
+            samples, _, _ = next(stream)
         if use_ps:
             samples = part.to_linear(samples)
 
@@ -299,7 +364,7 @@ def simulate(cfg: SimConfig) -> SimResult:
                      if cfg.mechanism == "esd" else 1e-3)
 
         batches = _worker_batches(samples, assign, n, vocab)
-        stats: IterStats = cache.step(batches)
+        stats: IterStats = cache.step(batches, protect=protect)
 
         if use_ps:
             # cost = total traffic over every (worker, PS) link; a worker's
@@ -311,27 +376,43 @@ def simulate(cfg: SimConfig) -> SimResult:
             comm = stats.per_worker_cost(t_tran)
 
         # sample-exchange time from the compiled plan's byte accounting:
-        # ragged ships the bucketed schedule, padded one uniform block
+        # ragged ships the bucketed schedule, padded one uniform block.
+        # Each (src, dst) link is priced at min(bw_src, bw_dst) — a
+        # transfer cannot outrun either end's NIC — a worker serializes
+        # its own sends + receives, and the self-link is a free local
+        # copy (it never crosses the wire).
         exch_t = 0.0
         if cfg.exchange is not None:
+            t_plan0 = time.perf_counter()
             plan = compile_plan(assign, n, m,
                                 row_bytes=samples.shape[1] * 4, cap=m)
+            plan_t = time.perf_counter() - t_plan0
+            if cfg.decision_model == "measured":
+                # plan compilation is part of the decision stage (it is
+                # host-side work the pipeline hides the same way)
+                dec_t += plan_t
             rows_link = (plan.buckets if cfg.exchange == "ragged"
                          else np.full((n, n), plan.padded_block, np.int64))
             link_bytes = rows_link * plan.row_bytes
-            per_worker = ((link_bytes.sum(axis=1) + link_bytes.sum(axis=0))
-                          / np.asarray(bw, np.float64))
-            exch_t = float(per_worker.max())
+            exch_t = float(exchange_worker_times(link_bytes, bw).max())
             if it >= cfg.warmup:
                 exch_acc["payload_bytes"] += plan.stats.payload_bytes
                 exch_acc["wire_bytes"] += int(link_bytes.sum())
                 exch_acc["padded_wire_bytes"] += plan.stats.padded_bytes
                 exch_acc["times"].append(exch_t)
-        iter_time = max(cfg.compute_time_s + comm.max() + exch_t, dec_t)
+        # two pipeline stages: training (compute + PS sync + sample
+        # exchange) and the dispatch decision (+ plan) for the next
+        # iteration.  Pipelined they overlap (max); synchronous they sum.
+        train_stage = cfg.compute_time_s + comm.max() + exch_t
+        if cfg.pipeline_depth >= 2:
+            iter_time = max(train_stage, dec_t)
+        else:
+            iter_time = train_stage + dec_t
 
         if it >= cfg.warmup:
             per_iter_cost.append(cost)
             per_iter_time.append(iter_time)
+            train_stage_times.append(train_stage)
             dec_times.append(dec_t)
             if alg1 is not None:
                 alg1_costs.append(alg1)
@@ -358,6 +439,18 @@ def simulate(cfg: SimConfig) -> SimResult:
             "time_mean_s": float(np.mean(exch_acc["times"]))
             if exch_acc["times"] else 0.0,
         }
+    pipeline = {
+        "depth": cfg.pipeline_depth,
+        "lookahead": cfg.lookahead,
+        "train_stage_mean_s": (float(np.mean(train_stage_times))
+                               if train_stage_times else 0.0),
+        "decision_stage_mean_s": (float(np.mean(dec_times))
+                                  if dec_times else 0.0),
+        "miss_pull_total": int(sum(ingredient[c]["miss_pull"]
+                                   for c in ingredient)),
+        "dedup_saved_ops": int(dedup_saved),
+        "dedup_total_touches": int(dedup_touches),
+    }
     return SimResult(
         cost=float(per_iter_cost.sum()),
         itps=float(len(per_iter_time) / per_iter_time.sum()),
@@ -368,4 +461,5 @@ def simulate(cfg: SimConfig) -> SimResult:
         per_iter_time=per_iter_time,
         alg1_cost=float(np.sum(alg1_costs)) if alg1_costs else None,
         exchange=exchange,
+        pipeline=pipeline,
     )

@@ -44,20 +44,28 @@ def make_serve_step(cfg: ModelConfig):
 
 
 def make_esd_exchange(mode: str, n: int, m: int, axis_name: str = "data",
-                      use_pallas: bool = False):
+                      use_pallas: bool = False, budget: int | None = None,
+                      out_rows: int | None = None):
     """Row-exchange function for the DLRM ESD step (inside shard_map):
     routes any (m, ...) per-sample array (aux features, labels) to the
     worker its sample was assigned to.
 
     ``mode="padded"`` is the fixed m/n all_to_all baseline;
-    ``mode="ragged"`` runs the repro.exchange executor with budget m/n —
-    bitwise-equal output here (the dispatch capacity is the hard m/n
-    split), exercising the ragged wire path end to end in the real
-    train step.
+    ``mode="ragged"`` runs the repro.exchange executor — with the
+    default ``budget = m // n`` / ``out_rows = m`` it is bitwise-equal
+    to the padded path (the dispatch capacity is the hard m/n split);
+    with a relaxed capacity (``cap_slack > 0``) pass the matching
+    ``exchange_budget`` and ``out_rows = n * budget`` so aux rows ride
+    the same wire layout as the samples (PAD fill = -1 past the valid
+    prefix).
     """
     if mode not in ("padded", "ragged"):
         raise ValueError(f"unknown exchange mode {mode!r}")
     if mode == "padded":
+        if budget not in (None, m // n) or out_rows not in (None, m):
+            raise ValueError("padded exchange is fixed-shape: budget/out_rows "
+                             "cannot deviate from m/n and m")
+
         def route(a, assign):
             order = jnp.argsort(assign, stable=True)
             routed = a[order].reshape((n, m // n) + a.shape[1:])
@@ -65,13 +73,121 @@ def make_esd_exchange(mode: str, n: int, m: int, axis_name: str = "data",
                 (m,) + a.shape[1:])
     else:
         from ..exchange.ragged import ragged_exchange
+        budget = m // n if budget is None else budget
+        out_rows = m if out_rows is None else out_rows
 
         def route(a, assign):
-            out, _, _ = ragged_exchange(a, assign, axis_name, m // n,
-                                        out_rows=m, use_pallas=use_pallas)
+            out, _, _ = ragged_exchange(a, assign, axis_name, budget,
+                                        out_rows=out_rows,
+                                        use_pallas=use_pallas)
             return out
 
     return route
+
+
+def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
+                         alpha: float, *, part=None, exchange: str = "padded",
+                         cap_slack: float = 0.0, sparse_esd: bool = True,
+                         capacity: int | None = None,
+                         use_pallas: bool = False):
+    """Jitted stage functions for the pipelined DLRM ESD step
+    (repro.pipeline.runner): the per-step work splits into
+
+      decide(esd_state, sparse)                    -> (assign (k,), alg1)
+      advance(esd_state, sparse, dense, labels, assign)
+          -> ((sparse', dense', labels'), new_esd_state, counts)
+      realized_cost(esd_state, sparse, assign)     -> alg1 scalar
+
+    ``decide`` is Alg. 1 + hybrid assignment per shard (the stage the
+    pipeline hides under training); ``advance`` moves the samples over
+    the selected wire path and runs the cache-state machine; neither
+    reads the model parameters, so the chain can run ahead of the train
+    stage.  ``realized_cost`` re-scores an assignment under a given
+    state — the stale mode's commit-time correction.
+
+    With ``cap_slack > 0`` (needs ``exchange="ragged"``) the assignment
+    may skew past m/n and the exchanged arrays come back with
+    ``out_rows = n * exchange_budget(cap, m)`` rows per shard, valid
+    rows compacted first and PAD (-1) after — pair with the PAD-masked
+    DLRM loss.  Returns ``(decide, advance, realized_cost, out_rows)``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..core.dispatch_tpu import (dispatch_cap, esd_cost_matrix,
+                                     esd_decide, esd_state_update,
+                                     esd_state_update_sparse, exchange_budget,
+                                     need_ids_list, need_matrix)
+
+    axis = "data"
+    if cap_slack > 0.0 and exchange != "ragged":
+        # same guard esd_dispatch enforces: a relaxed cap can assign a
+        # worker more than m/n samples, which the fixed-shape padded
+        # route would silently deliver to the wrong workers
+        raise ValueError("cap_slack > 0 needs exchange='ragged' (the padded "
+                         "all_to_all requires equal m/n groups)")
+    cap = dispatch_cap(m, n, cap_slack)
+    budget = m // n if cap_slack <= 0.0 else exchange_budget(cap, m)
+    out_rows = m if cap_slack <= 0.0 else n * budget
+    if exchange == "ragged":
+        route = make_esd_exchange(exchange, n, m, use_pallas=use_pallas,
+                                  budget=budget, out_rows=out_rows)
+    else:
+        route = make_esd_exchange(exchange, n, m, use_pallas=use_pallas)
+
+    def decide_shard(state, s):
+        if part is not None:
+            s = part.to_linear(s)
+        assign, alg1 = esd_decide(s, state, t_tran, alpha, axis_name=axis,
+                                  use_pallas=use_pallas, part=part,
+                                  cap_slack=cap_slack, with_cost=True)
+        return assign, jax.lax.psum(alg1, axis)
+
+    @jax.jit
+    def decide(esd_state, sparse):
+        return shard_map(
+            lambda s: decide_shard(esd_state, s), mesh=mesh,
+            in_specs=(P(axis, None),), out_specs=(P(axis), P()),
+            check_rep=False)(sparse)
+
+    def advance_shard(s, d, l, a):
+        if part is not None:
+            s = part.to_linear(s)
+        s2, d2, l2 = route(s, a), route(d, a), route(l, a)
+        need = (need_ids_list(s2, axis) if sparse_esd
+                else need_matrix(s2, axis, V_space))
+        return s2, d2, l2, need
+
+    @jax.jit
+    def advance(esd_state, sparse, dense, labels, assign):
+        s2, d2, l2, need = shard_map(
+            advance_shard, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),
+            out_specs=(P(axis, None), P(axis, None), P(axis), P(None, None)),
+            check_rep=False)(sparse, dense, labels, assign)
+        if sparse_esd:
+            new_state, counts = esd_state_update_sparse(esd_state, need,
+                                                        capacity, part)
+        else:
+            new_state, counts = esd_state_update(esd_state, need, capacity)
+        return (s2, d2, l2), new_state, counts
+
+    def realized_shard(state, s, a):
+        if part is not None:
+            s = part.to_linear(s)
+        C = esd_cost_matrix(s, state, t_tran, use_pallas=use_pallas,
+                            part=part)
+        alg1 = jnp.take_along_axis(C, a[:, None], axis=1)[:, 0].sum()
+        return jax.lax.psum(alg1, axis)
+
+    @jax.jit
+    def realized_cost(esd_state, sparse, assign):
+        return shard_map(
+            lambda s, a: realized_shard(esd_state, s, a), mesh=mesh,
+            in_specs=(P(axis, None), P(axis)), out_specs=P(),
+            check_rep=False)(sparse, assign)
+
+    return decide, advance, realized_cost, out_rows
 
 
 # --------------------------------------------------------------------------

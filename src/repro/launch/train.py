@@ -2,15 +2,26 @@
 
 Two modes:
   * DLRM (paper workloads): PS-style sharded embedding table + replicated
-    MLP over a (data, model) mesh, with ESD dispatch running INSIDE the
-    jitted step (shard_map + static all_to_all) when ``--esd-alpha`` is
-    set.  Logs per-step transmission counts/cost from the in-jit cache
-    state machine.
+    MLP over a (data, model) mesh, with ESD dispatch running as jitted
+    stages (shard_map + static all_to_all) when ``--esd-alpha`` is set.
+    The step is split decide / advance / train and driven by the
+    repro.pipeline executor: ``--pipeline-depth 2`` lets the dispatch
+    decision for step t+1 overlap step t's forward/backward (the paper's
+    decision hiding; depth 1 is the synchronous loop and bitwise-equal),
+    ``--lookahead W`` reports the W-batch window-dedup stats, and
+    ``--stale-decide`` runs the double-buffered staleness-tolerant
+    variant (decides on the t-1 cache state, re-scores on commit).
+    ``--cap-slack`` (with ``--exchange ragged``) relaxes the per-worker
+    dispatch capacity; workers then train uneven PAD-masked batches.
+    Logs per-step transmission counts/cost from the in-jit cache state
+    machine.
   * LM (any assigned arch, reduced or full): standard data+tensor parallel
     next-token training on a synthetic Zipf token stream.
 
 Examples (CPU, reduced configs):
   PYTHONPATH=src python -m repro.launch.train --arch wdl-tiny --steps 30 --esd-alpha 1
+  PYTHONPATH=src python -m repro.launch.train --arch wdl-tiny --steps 30 \
+      --esd-alpha 1 --pipeline-depth 2 --lookahead 4
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke --steps 5
 """
 from __future__ import annotations
@@ -25,19 +36,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
 from ..checkpoint import restore_checkpoint, save_checkpoint
 from ..configs import DLRM_CONFIGS, get_config
-from ..core.dispatch_tpu import (
-    EsdState, esd_dispatch, esd_init, esd_sparse_init, esd_state_update,
-    esd_state_update_sparse, need_ids_list, need_matrix,
-)
+from ..core.dispatch_tpu import esd_init, esd_sparse_init
 from ..core.simulator import DEFAULT_BANDWIDTHS, GBPS, hetero_ps_bandwidths
 from ..data.loader import PrefetchLoader
 from ..data.synthetic import WORKLOADS, token_stream
 from ..dist.sharding import param_specs, to_shardings
-from .steps import make_esd_exchange
+from ..pipeline import LookaheadWindow, PipelinedRunner
+from .steps import make_dlrm_esd_stages
 from ..models import api, dlrm
 from ..optim import get_optimizer
 from ..ps import make_partition
@@ -58,6 +66,18 @@ def run_dlrm(args):
     use_esd = args.esd_alpha is not None
     capacity = int(args.capacity_ratio * V)
     sparse_esd = args.esd_engine == "sparse"
+    if args.cap_slack > 0.0:
+        if not use_esd:
+            raise SystemExit("--cap-slack needs ESD (--esd-alpha)")
+        if args.exchange != "ragged":
+            raise SystemExit("--cap-slack > 0 needs --exchange ragged (the "
+                             "padded all_to_all requires equal m/n groups)")
+    if args.stale_decide and args.pipeline_depth < 2:
+        raise SystemExit("--stale-decide needs --pipeline-depth >= 2")
+    if (args.pipeline_depth > 1 or args.stale_decide) and not use_esd:
+        raise SystemExit("--pipeline-depth > 1 / --stale-decide need ESD "
+                         "(--esd-alpha): without dispatch there is no "
+                         "decision stage to pipeline")
 
     # multi-PS: partition the V-space (repro.ps), run ids/planes/tables in
     # the PS-linearized space, and cost each op at the owning shard's link
@@ -84,12 +104,6 @@ def run_dlrm(args):
         # shard the DLRM table over n_ps: (n_ps, max_rows, E) PS stack
         params = dlrm.ps_stack_tables(params, part)
     opt_state = optimizer.init(params)
-    if sparse_esd:
-        # L = m*F ids per worker post-exchange (need_ids_list width)
-        esd = esd_sparse_init(n, V_space, capacity if capacity < V else None,
-                              max_ids=m * wl.width)
-    else:
-        esd = esd_init(n, V)
 
     # PS-style placement: embedding/wide tables row-sharded over the data
     # axis (each worker holds a V/n slice, replicated if V doesn't divide
@@ -98,66 +112,30 @@ def run_dlrm(args):
     params = jax.device_put(params, shardings)
     batch_shd = lambda nd: NamedSharding(mesh, P(*(("data",) + (None,) * (nd - 1))))
 
-    # padded (fixed m/n all_to_all) or ragged (repro.exchange) wire path;
-    # bitwise-equal outputs here since the dispatch capacity stays m/n
-    route = make_esd_exchange(args.exchange, n, m)
-
-    def dispatch(esd_state, sparse, dense, labels):
-        def shard_fn(s, d, l):
-            (s2, d2, l2), _ = esd_dispatch_aux(s, (d, l), esd_state, t_tran,
-                                               args.esd_alpha or 0.0)
-            need = (need_ids_list(s2, "data") if sparse_esd
-                    else need_matrix(s2, "data", V_space))
-            return s2, d2, l2, need
-
-        return shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(P("data", None), P("data", None), P("data")),
-            out_specs=(P("data", None), P("data", None), P("data"),
-                       P(None, None)),
-            check_rep=False,
-        )(sparse, dense, labels)
-
-    def esd_dispatch_aux(s, aux, state, t, alpha):
-        exch_s, assign = esd_dispatch(s, state, t, alpha, part=part,
-                                      exchange=args.exchange)
-        return (exch_s, *(route(a, assign) for a in aux)), assign
+    # PAD-masked loss only when slack can actually produce PAD rows — on
+    # even batches the masked mean equals the plain one, but the plain
+    # path stays the bitwise reference
+    loss_fn = dlrm.bce_loss_masked if args.cap_slack > 0.0 else dlrm.bce_loss
 
     @partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, opt_state, esd_state, sparse, dense, labels):
-        counts = None
-        if part is not None:
-            # translate global ids -> (shard, local_row) linearized space
-            # once; dispatch, cache state, and the PS-stacked table lookup
-            # all run on (and stay consistent in) that space
+    def train_jit(params, opt_state, sparse, dense, labels):
+        if not use_esd and part is not None:
             sparse = part.to_linear(sparse)
-        if use_esd:
-            sparse, dense, labels, need = dispatch(esd_state, sparse, dense, labels)
-            cap = capacity if capacity < V else None
-            if sparse_esd:
-                esd_state, counts = esd_state_update_sparse(
-                    esd_state, need, cap, part)
-            else:
-                esd_state, counts = esd_state_update(esd_state, need, cap)
-        loss, grads = jax.value_and_grad(dlrm.bce_loss)(
+        loss, grads = jax.value_and_grad(loss_fn)(
             params, cfg, sparse, dense, labels)
         params, opt_state = optimizer.update(grads, opt_state, params)
-        return params, opt_state, esd_state, loss, counts
+        return params, opt_state, loss
 
-    stream = PrefetchLoader(wl.stream(args.seed + 1, k), depth=2)
     metrics = []
     t_total = jnp.asarray(t_tran)
-    for i in range(args.steps):
-        sparse, dense, labels = next(stream)
-        t0 = time.perf_counter()
-        params, opt_state, esd, loss, counts = step(
-            params, opt_state, esd,
-            jax.device_put(jnp.asarray(sparse), batch_shd(2)),
-            jax.device_put(jnp.asarray(dense), batch_shd(2)),
-            jax.device_put(jnp.asarray(labels), batch_shd(1)))
-        loss = float(loss)
-        rec = {"step": i, "loss": loss,
-               "wall_s": round(time.perf_counter() - t0, 4)}
+    last_t = time.perf_counter()
+
+    def record(i, loss, counts, meta, info):
+        nonlocal last_t
+        now = time.perf_counter()
+        rec = {"step": i, "loss": float(loss),
+               "wall_s": round(now - last_t, 4)}
+        last_t = now
         if counts is not None:
             base_ops = ("miss_pull", "update_push", "evict_push")
             ops = {op: np.asarray(counts[op]) for op in base_ops}
@@ -170,12 +148,85 @@ def run_dlrm(args):
                 rec["cost"] = float(sum((ops[o] * np.asarray(t_total)).sum()
                                         for o in ops))
             rec.update({op: int(v.sum()) for op, v in ops.items()})
+        if meta is not None:
+            rec["window_dedup_frac"] = round(meta.dedup_frac, 4)
+        for key in ("alg1_est", "alg1_realized"):
+            if key in info:
+                rec[key] = float(info[key])
         metrics.append(rec)
         if args.verbose and (i % args.log_every == 0 or i == args.steps - 1):
             print(json.dumps(rec), flush=True)
         if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, i + 1,
                             {"params": params, "opt": opt_state})
+        return rec
+
+    # host batch source, optionally with the lookahead dedup window
+    stream = PrefetchLoader(wl.stream(args.seed + 1, k), depth=2)
+    if args.lookahead > 0:
+        src = iter(LookaheadWindow(stream, args.lookahead,
+                                   key=lambda b: b[0]))
+    else:
+        src = ((item, None) for item in stream)
+
+    def device_batches():
+        for (sparse, dense, labels), meta in src:
+            yield ((jax.device_put(jnp.asarray(sparse), batch_shd(2)),
+                    jax.device_put(jnp.asarray(dense), batch_shd(2)),
+                    jax.device_put(jnp.asarray(labels), batch_shd(1))), meta)
+
+    if not use_esd:
+        dev_batches = device_batches()
+        for i in range(args.steps):
+            try:
+                (sparse, dense, labels), meta = next(dev_batches)
+            except StopIteration:
+                break
+            params, opt_state, loss = train_jit(params, opt_state,
+                                                sparse, dense, labels)
+            record(i, loss, None, meta, {})
+        return metrics
+
+    # ESD: decide / advance / train stages driven by the pipelined
+    # executor — depth 1 is the synchronous loop (bitwise-identical)
+    decide_jit, advance_jit, realized_jit, out_rows = make_dlrm_esd_stages(
+        mesh, n, m, V_space, t_tran, args.esd_alpha or 0.0, part=part,
+        exchange=args.exchange, cap_slack=args.cap_slack,
+        sparse_esd=sparse_esd, capacity=capacity if capacity < V else None)
+    if sparse_esd:
+        # L = out_rows*F ids per worker post-exchange (need_ids_list
+        # width) — out_rows from the stage factory, so the slot-buffer
+        # sizing can never drift from the advance stage's row count
+        esd = esd_sparse_init(n, V_space, capacity if capacity < V else None,
+                              max_ids=out_rows * wl.width)
+    else:
+        esd = esd_init(n, V)
+
+    def decide_fn(state, batch):
+        return decide_jit(state, batch[0][0])
+
+    def advance_fn(state, batch, assign):
+        (s, d, l), meta = batch
+        x, new_state, counts = advance_jit(state, s, d, l, assign)
+        return x, new_state, {"counts": counts, "meta": meta}
+
+    def train_fn(x):
+        nonlocal params, opt_state
+        params, opt_state, loss = train_jit(params, opt_state, *x)
+        return loss
+
+    realized_fn = None
+    if args.stale_decide:
+        realized_fn = lambda state, batch, assign: realized_jit(
+            state, batch[0][0], assign)
+
+    runner = PipelinedRunner(
+        decide_fn, advance_fn, train_fn, esd,
+        depth=args.pipeline_depth, stale=args.stale_decide,
+        realized_cost_fn=realized_fn)
+    runner.run(device_batches(), steps=args.steps,
+               record_fn=lambda t, loss, aux, info: record(
+                   t, loss, aux["counts"], aux["meta"], info))
     return metrics
 
 
@@ -248,6 +299,24 @@ def build_parser():
                     help="sample wire path: fixed m/n all_to_all (padded) "
                          "or the repro.exchange budgeted executor (ragged; "
                          "bitwise-equal under the hard m/n capacity)")
+    ap.add_argument("--cap-slack", type=float, default=0.0,
+                    help="relax the per-worker dispatch capacity by this "
+                         "fraction of m/n (needs --exchange ragged; workers "
+                         "then train uneven PAD-masked batches)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="decide/advance stages may run this many steps "
+                         "ahead of training (1 = synchronous, bitwise-equal "
+                         "to the pipelined schedule; 2 hides the dispatch "
+                         "decision under the previous step's fwd/bwd)")
+    ap.add_argument("--lookahead", type=int, default=0,
+                    help="W-batch dedup window over the input stream "
+                         "(repro.pipeline.window); logs per-step "
+                         "window_dedup_frac")
+    ap.add_argument("--stale-decide", action="store_true",
+                    help="decide on the t-1 cache state (double-buffered) "
+                         "so the decision overlaps even the cache update; "
+                         "logs the commit-time re-score alg1_realized "
+                         "(needs --pipeline-depth >= 2)")
     ap.add_argument("--capacity-ratio", type=float, default=0.2)
     ap.add_argument("--n-ps", type=int, default=1,
                     help="partition the embedding V-space over this many "

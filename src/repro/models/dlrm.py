@@ -132,6 +132,25 @@ def bce_loss(params, cfg: DLRMConfig, sparse_ids, dense, labels):
     )
 
 
+def bce_loss_masked(params, cfg: DLRMConfig, sparse_ids, dense, labels):
+    """PAD-masked BCE for uneven ragged batches (``cap_slack > 0``).
+
+    The ragged exchange compacts each worker's real samples to the front
+    of a fixed (n * budget)-row buffer and fills the rest with PAD
+    (labels = -1); those rows contribute neither loss nor gradient, and
+    the mean runs over the valid rows only — so the global loss is still
+    the mean over the k real samples of the iteration.  On an all-valid
+    batch this equals :func:`bce_loss`.
+    """
+    valid = labels >= 0.0
+    logits = forward(params, cfg, sparse_ids, dense)
+    lbl = jnp.where(valid, labels, 0.0)
+    per_row = (jnp.maximum(logits, 0) - logits * lbl
+               + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    per_row = jnp.where(valid, per_row, 0.0)
+    return per_row.sum() / jnp.maximum(valid.sum(), 1).astype(per_row.dtype)
+
+
 def train_step(params, cfg: DLRMConfig, batch, lr=1e-2):
     """Plain-SGD step (the paper's consistency analysis assumes SGD)."""
     loss, grads = jax.value_and_grad(bce_loss)(

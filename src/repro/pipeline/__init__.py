@@ -1,0 +1,37 @@
+"""repro.pipeline — lookahead dispatch pipelining.
+
+The paper hides the dispatch decision for iteration t+1 under the
+training computation of iteration t (Fig. 3).  This subsystem turns that
+sentence into runnable structure, in three layers:
+
+  * :mod:`repro.pipeline.window` — a sliding lookahead window over the
+    batch stream (BagPipe-style): dedups the touched ids across the next
+    W batches and emits per-id first-use / last-use metadata, which the
+    simulator's caches use as a soft eviction shield and the benchmarks
+    report as prefetch-dedup savings.
+  * :mod:`repro.pipeline.double_buffer` — a two-slot buffer over the ESD
+    cache state so a *stale* dispatch decision (computed on the t-1
+    state while step t is still updating) can be issued concurrently,
+    plus the analysis tools that keep it honest: the exact set of
+    changed state columns and a per-sample upper bound on the Alg.-1
+    cost error a stale decision can incur.
+  * :mod:`repro.pipeline.runner` — the pipelined executor: the per-step
+    work is split into a decide stage (Alg. 1 cost + hybrid assign), an
+    advance stage (sample exchange + cache-state update) and a train
+    stage (forward/backward + optimizer).  The decide/advance chain
+    never reads the model parameters, so it can run ``depth - 1`` steps
+    ahead of training; with jax async dispatch the host enqueues the
+    chain for step t+1 while the device executes step t's
+    forward/backward.  ``depth=1`` is the synchronous loop and is
+    bitwise-identical to running the stages back to back.
+"""
+from .double_buffer import (DoubleBuffer, changed_ids, db_commit, db_init,
+                            staleness_bound)
+from .runner import PipelinedRunner
+from .window import LookaheadWindow, WindowMeta, window_meta
+
+__all__ = [
+    "DoubleBuffer", "db_init", "db_commit", "changed_ids",
+    "staleness_bound", "PipelinedRunner", "LookaheadWindow", "WindowMeta",
+    "window_meta",
+]

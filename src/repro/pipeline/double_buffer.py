@@ -1,0 +1,116 @@
+"""Double-buffered ESD cache state + staleness analysis.
+
+The pipelined executor (``repro.pipeline.runner``) lets the dispatch
+decision for step t+1 run while step t trains.  In the *exact* mode the
+decision reads the state committed by step t's (cheap) cache update, so
+the only concurrency is decide-vs-forward/backward.  In the *stale* mode
+the decision reads the state from step t-1 instead — removing the data
+dependency on step t's update entirely, at the price of deciding on a
+slightly out-of-date cost matrix.
+
+:class:`DoubleBuffer` is the two-slot state that makes the stale read
+safe under jit: ``front`` is the committed state after the latest
+advance, ``back`` the one before it.  ``db_commit`` rotates.
+
+What keeps the stale variant honest (the "bounded correction"): between
+the decide-time state and the commit-time state, only the columns
+touched by the intervening step can differ — the step's need ids plus
+its evictions, never more than that (:func:`changed_ids` recovers the
+set exactly from two states).  Since a sample's Alg.-1 cost is the sum
+of its ids' per-id cost rows, and one id's row can swing by at most the
+total per-embedding transmission time of the cluster, the stale cost
+matrix is wrong by at most
+
+    |C_stale[i, j] - C_true[i, j]|  <=  |ids(E_i) ∩ changed| * sum_j T_j
+
+for every worker j (:func:`staleness_bound`; per-(worker, PS) links
+refine sum_j T_j to sum_j t_ps[j, shard(x)] per changed id x).  On
+commit the runner replaces the stale estimate with the realized cost of
+the chosen assignment under the committed state — the correction — and
+the bound certifies how far the *decision* itself can have drifted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core.cost import dedup_mask_np
+
+__all__ = ["DoubleBuffer", "db_init", "db_commit", "changed_ids",
+           "staleness_bound"]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("front", "back"), meta_fields=())
+@dataclasses.dataclass
+class DoubleBuffer:
+    """Two-slot ESD state: ``front`` = committed state after step t,
+    ``back`` = state after step t-1 (what a stale decide reads)."""
+
+    front: Any
+    back: Any
+
+
+def db_init(state) -> DoubleBuffer:
+    """Both slots start at the initial state (steps 0 and 1 decide on it)."""
+    return DoubleBuffer(front=state, back=state)
+
+
+def db_commit(db: DoubleBuffer, new_state) -> DoubleBuffer:
+    """Rotate: the committed state moves to ``back``, ``new_state`` becomes
+    ``front``."""
+    return DoubleBuffer(front=new_state, back=db.front)
+
+
+def changed_ids(state_a, state_b) -> np.ndarray:
+    """Ids whose cache-state column differs between two (Sparse)EsdStates.
+
+    Compares the planes the Alg.-1 cost matrix reads (``latest``,
+    ``dirty``).  For consecutive states this is exactly the intervening
+    step's need ids plus its evictions — the support of any stale-decision
+    error.  Analysis/test helper (O(n*V); the runner never calls it on
+    the hot path).
+    """
+    la, lb = np.asarray(state_a.latest), np.asarray(state_b.latest)
+    da, db_ = np.asarray(state_a.dirty), np.asarray(state_b.dirty)
+    diff = (la != lb).any(axis=0) | (da != db_).any(axis=0)
+    return np.where(diff)[0].astype(np.int64)
+
+
+def staleness_bound(samples: np.ndarray, changed: np.ndarray,
+                    t_tran: np.ndarray, part=None) -> np.ndarray:
+    """(k,) per-sample upper bound on the stale-decision cost error.
+
+    For every worker j, ``|C_stale[i, j] - C_true[i, j]| <= bound[i]``
+    where C_* are Alg.-1 cost matrices computed from two states that
+    differ only on the ``changed`` id columns.
+
+    Per-id argument: C[i, j] = sum_{x in ids(E_i)} v[x, j] with
+    v[x, j] = (1 - latest[j, x]) * T_j + sum_{j' != j} dirty[j', x] * T_{j'}
+    in [0, sum_j T_j], so flipping id x's column moves C[i, j] by at most
+    sum_j T_j — per-sample set semantics (``dedup_mask_np``) make each
+    changed id count once, exactly as it enters C.
+
+    With ``part`` and a per-(worker, PS) ``t_tran`` of shape (n, n_ps),
+    the per-id swing refines to ``sum_j t_tran[j, shard(x)]`` (ids and
+    samples in the PS-linearized space).
+    """
+    samples = np.asarray(samples)
+    t_tran = np.asarray(t_tran, np.float64)
+    ids, mask = dedup_mask_np(samples)
+    changed = np.asarray(changed)
+    in_changed = np.isin(ids, changed) & mask             # (k, F)
+    if part is None:
+        if t_tran.ndim != 1:
+            raise ValueError("per-(worker, PS) t_tran needs part=")
+        return in_changed.sum(axis=1) * float(t_tran.sum())
+    if t_tran.ndim != 2:
+        raise ValueError("part= needs a per-(worker, PS) t_tran of shape "
+                         f"(n, n_ps), got shape {t_tran.shape}")
+    per_shard = t_tran.sum(axis=0)                        # (n_ps,)
+    swing = per_shard[part.shard_of_linear(ids)]          # (k, F)
+    return (swing * in_changed).sum(axis=1)

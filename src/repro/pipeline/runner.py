@@ -1,0 +1,134 @@
+"""Pipelined ESD training executor.
+
+Splits one ESD training step into three stages and software-pipelines
+them across iterations:
+
+  decide   assign_t            = decide_fn(esd_state, batch_t)
+  advance  (x_t, state_t, aux) = advance_fn(state_{t-1}, batch_t, assign_t)
+  train    loss_t              = train_fn(x_t)
+
+The decide/advance chain (Alg. 1 cost matrix + hybrid assignment +
+sample exchange + cache-state update) never reads the model parameters,
+so it can run ahead of training: with ``depth = d`` the runner keeps up
+to ``d - 1`` advanced steps in flight before it blocks on a train
+result.  All three stages are jax-jitted device computations, so
+"running ahead" costs no threads — jax's async dispatch queues the
+chain for steps t+1.. while the device still executes step t's
+forward/backward, which is exactly the paper's decision hiding
+(dispatch latency leaves the critical path once it fits under a train
+step).
+
+``depth=1`` is the synchronous loop.  Because every stage is the same
+jitted function with the same inputs in either mode, the pipelined
+schedule is *bitwise identical* to the synchronous one — only the host's
+issue order changes.  That equivalence is pinned by the test suite and
+is the backbone invariant of the subsystem.
+
+``stale=True`` switches decide to the :class:`DoubleBuffer`'s back slot:
+the decision for step t is computed on the state of step t-2, removing
+its data dependency on step t-1's cache update so it can overlap even
+that.  The decision may then be off by a bounded amount
+(``double_buffer.staleness_bound``); on commit the runner applies the
+correction — it re-scores the chosen assignment against the committed
+state via ``realized_cost_fn`` and records both numbers, so consumers
+always account cost at the realized value, never the stale estimate.
+
+Stage contracts (all device-array friendly):
+  * ``decide_fn(esd_state, batch) -> (assign, alg1_est | None)`` —
+    ``alg1_est`` is the Alg.-1 objective of the chosen assignment under
+    the decide-time state (a scalar), or None if not tracked.
+  * ``advance_fn(esd_state, batch, assign) -> (train_input, new_state,
+    aux)`` — ``aux`` is an arbitrary pytree of per-step accounting
+    (e.g. transmission counts), handed back on drain.
+  * ``train_fn(train_input) -> loss`` — owns the parameter/optimizer
+    state (closure); returns the scalar loss.
+  * ``realized_cost_fn(state, batch, assign) -> scalar`` (optional) —
+    the commit-time re-score used by the stale mode.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, Iterable, Optional
+
+from .double_buffer import db_commit, db_init
+
+__all__ = ["PipelinedRunner"]
+
+
+class PipelinedRunner:
+    def __init__(self, decide_fn: Callable, advance_fn: Callable,
+                 train_fn: Callable, esd_state: Any, depth: int = 1,
+                 stale: bool = False,
+                 realized_cost_fn: Optional[Callable] = None):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if stale and depth < 2:
+            raise ValueError("stale decisions only make sense pipelined "
+                             "(depth >= 2): at depth 1 the committed state "
+                             "is always available")
+        self.decide_fn = decide_fn
+        self.advance_fn = advance_fn
+        self.train_fn = train_fn
+        self.esd_state = esd_state
+        self.depth = depth
+        self.stale = stale
+        self.realized_cost_fn = realized_cost_fn
+
+    def run(self, batches: Iterable[Any], steps: Optional[int] = None,
+            record_fn: Optional[Callable] = None) -> list:
+        """Drive the pipeline over ``batches`` (at most ``steps`` of them).
+
+        ``record_fn(t, loss, aux, info) -> record`` builds one output
+        record per step at drain time (the sync point — convert device
+        values to python there); default records ``{"step", "loss"}``.
+        ``info`` carries the decision metrics: ``alg1_est`` when the
+        decide stage tracks it, plus ``alg1_realized`` (the commit-time
+        correction) in stale mode.
+        """
+        it = iter(batches)
+        pending: deque = deque()
+        records = []
+        # stale mode rotates the two-slot DoubleBuffer; exact mode keeps
+        # a single committed state (the back slot would pin a second full
+        # EsdState alive for nothing)
+        db = db_init(self.esd_state) if self.stale else None
+        state = self.esd_state
+        t = 0
+        while steps is None or t < steps:
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            committed = db.front if self.stale else state
+            decide_state = db.back if self.stale else state
+            assign, alg1_est = self.decide_fn(decide_state, batch)
+            info = {}
+            if alg1_est is not None:
+                info["alg1_est"] = alg1_est
+            if self.stale and self.realized_cost_fn is not None:
+                # the bounded correction: re-score the stale decision on
+                # the committed state the step actually runs against
+                # (what an exact decide would have read)
+                info["alg1_realized"] = self.realized_cost_fn(
+                    committed, batch, assign)
+            train_input, new_state, aux = self.advance_fn(committed, batch,
+                                                          assign)
+            if self.stale:
+                db = db_commit(db, new_state)
+            state = new_state
+            pending.append((t, train_input, aux, info))
+            # keep at most depth-1 advanced steps in flight ahead of train
+            while len(pending) >= self.depth:
+                records.append(self._drain_one(pending, record_fn))
+            t += 1
+        while pending:
+            records.append(self._drain_one(pending, record_fn))
+        self.esd_state = state
+        return records
+
+    def _drain_one(self, pending: deque, record_fn: Optional[Callable]):
+        t, train_input, aux, info = pending.popleft()
+        loss = self.train_fn(train_input)
+        if record_fn is None:
+            return {"step": t, "loss": float(loss)}
+        return record_fn(t, loss, aux, info)

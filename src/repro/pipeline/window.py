@@ -1,0 +1,155 @@
+"""Sliding lookahead window over the batch stream (BagPipe-style).
+
+BagPipe (Agarwal et al.) observes that a DLRM input pipeline can look a
+few batches ahead, and that deduping embedding accesses across that
+window — fetch an id once for its *first* use, keep it resident until
+its *last* use — removes most of the redundant PS traffic under skewed
+(Zipf) streams, where the head ids recur in nearly every batch.
+
+:func:`window_meta` computes exactly that metadata for a list of batches
+(per-batch *set* semantics, matching the cache protocol: an id touched
+twice inside one batch counts once):
+
+  * ``uids``       — sorted unique valid ids across the window;
+  * ``first_use``  — window index of the first batch touching each uid;
+  * ``last_use``   — window index of the last batch touching each uid;
+  * ``touches``    — number of window batches touching each uid.
+
+``total_touches`` (the sum of per-batch unique counts) is what a
+window-blind prefetcher would fetch; ``dedup_saved`` is the fraction of
+those fetches the window removes.
+
+:class:`LookaheadWindow` streams the same thing: it wraps any batch
+iterator, buffers ``window`` batches ahead, and yields
+``(item, meta-over-the-next-window-batches)`` — the metadata a pipelined
+trainer has in hand *before* it commits iteration t, which is what lets
+a cache shield soon-to-be-reused ids from eviction (see
+``repro.core.cache`` ``protect=``) and a dispatcher decide ahead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Iterator, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["WindowMeta", "window_meta", "LookaheadWindow"]
+
+PAD_ID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowMeta:
+    """Dedup metadata for one window of W batches (see module docstring)."""
+
+    window: int                # number of batches described
+    uids: np.ndarray           # (U,) sorted unique valid ids
+    first_use: np.ndarray      # (U,) int window index of first touching batch
+    last_use: np.ndarray       # (U,) int window index of last touching batch
+    touches: np.ndarray        # (U,) int number of touching batches
+    total_touches: int         # sum of per-batch unique-id counts
+
+    @property
+    def n_unique(self) -> int:
+        return int(self.uids.size)
+
+    @property
+    def dedup_saved(self) -> int:
+        """Fetch ops a window-dedup prefetcher skips vs per-batch fetching."""
+        return int(self.total_touches - self.uids.size)
+
+    @property
+    def dedup_frac(self) -> float:
+        if self.total_touches == 0:
+            return 0.0
+        return self.dedup_saved / self.total_touches
+
+    def reused_ids(self) -> np.ndarray:
+        """Ids touched by more than one window batch — the set worth
+        keeping resident across the window."""
+        return self.uids[self.touches > 1]
+
+
+def _batch_unique(b: np.ndarray) -> np.ndarray:
+    """Sorted unique valid ids of one batch (PAD = -1 slots dropped)."""
+    b = np.asarray(b).reshape(-1)
+    return np.unique(b[b != PAD_ID])
+
+
+def window_meta(batches: Sequence[np.ndarray]) -> WindowMeta:
+    """Compute :class:`WindowMeta` for ``batches`` (each any-shape int
+    array of ids, PAD = -1 slots ignored)."""
+    return _meta_from_unique([_batch_unique(b) for b in batches])
+
+
+def _meta_from_unique(per_batch: Sequence[np.ndarray]) -> WindowMeta:
+    """:class:`WindowMeta` from per-batch sorted-unique id arrays — the
+    merge step, so a streaming caller can cache each batch's unique set
+    for the W steps it stays buffered instead of recomputing it."""
+    total = sum(len(u) for u in per_batch)
+    if total == 0:
+        z = np.zeros(0, np.int64)
+        return WindowMeta(window=len(per_batch), uids=z, first_use=z.copy(),
+                          last_use=z.copy(), touches=z.copy(),
+                          total_touches=0)
+    flat = np.concatenate(per_batch)
+    when = np.repeat(np.arange(len(per_batch), dtype=np.int64),
+                     [len(u) for u in per_batch])
+    uids, inv, touches = np.unique(flat, return_inverse=True,
+                                   return_counts=True)
+    first = np.full(uids.size, np.iinfo(np.int64).max, np.int64)
+    np.minimum.at(first, inv, when)
+    last = np.full(uids.size, -1, np.int64)
+    np.maximum.at(last, inv, when)
+    return WindowMeta(window=len(per_batch), uids=uids, first_use=first,
+                      last_use=last, touches=touches.astype(np.int64),
+                      total_touches=int(total))
+
+
+class LookaheadWindow:
+    """Wrap a batch iterator with a W-deep lookahead buffer.
+
+    Yields ``(item, meta)`` where ``meta`` is :func:`window_meta` over the
+    *next* ``window`` items (the current item excluded — it is already
+    committed; the window is what the pipeline still has time to act on).
+    Near the end of the stream the window shrinks; ``window=0`` yields
+    empty metadata and buffers nothing beyond the current item.
+
+    ``key`` extracts the id array from a stream item (default: the item
+    itself) — e.g. ``key=lambda b: b[0]`` for ``(sparse, dense, labels)``
+    tuples.
+    """
+
+    def __init__(self, it: Iterator[Any], window: int,
+                 key: Optional[Callable[[Any], np.ndarray]] = None):
+        if window < 0:
+            raise ValueError(f"window must be >= 0, got {window}")
+        self._it = iter(it)
+        self.window = window
+        self._key = key if key is not None else (lambda item: item)
+        self._buf: deque = deque()
+        self._exhausted = False
+
+    def _fill(self, upto: int):
+        while len(self._buf) < upto and not self._exhausted:
+            try:
+                item = next(self._it)
+            except StopIteration:
+                self._exhausted = True
+                return
+            # cache the unique set for the W steps the item stays
+            # buffered; only the merge reruns per step
+            self._buf.append((item, _batch_unique(self._key(item))))
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        self._fill(1)
+        if not self._buf:
+            raise StopIteration
+        item, _ = self._buf.popleft()
+        self._fill(self.window)
+        meta = _meta_from_unique([u for _, u in self._buf])
+        return item, meta

@@ -1,0 +1,448 @@
+"""repro.pipeline: lookahead window, double buffering, pipelined runner.
+
+Contracts under test:
+  * window metadata (property-tested over random batch lists): uids /
+    first_use / last_use / touches match a brute-force oracle, and the
+    streaming LookaheadWindow yields exactly window_meta of the next W
+    items;
+  * the pipelined schedule is *bitwise* the synchronous one: the real
+    jitted decide/advance/train stages at depth 1 vs depth 2/3 (and
+    with a lookahead window) produce identical loss trajectories AND
+    identical cache planes; the train driver reproduces the same
+    equality end to end;
+  * stale decisions are double-buffered correctly (decide reads the
+    t-2 state) and their Alg.-1 cost error is bounded by
+    staleness_bound — pinned against states that differ by one real
+    sparse-engine update (single-PS and multi-PS);
+  * the PAD-masked DLRM loss equals the plain loss on even batches
+    (slack = 0) and the valid-prefix loss on uneven ones;
+  * simulator: pipeline_depth=1 sums the train and decision stages
+    while depth=2 takes their max (same transmission accounting
+    either way), lookahead W > 0 reduces miss ops under Zipf skew, and
+    the exchange time prices each (src, dst) link at the slower end's
+    bandwidth with free self-links.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, "tests")
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container has no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs import DLRM_CONFIGS
+from repro.core.cost import (cost_matrix_sparse, cost_matrix_sparse_ps,
+                             transmission_time)
+from repro.core.dispatch_tpu import esd_sparse_init, esd_state_update_sparse
+from repro.core.simulator import (DEFAULT_BANDWIDTHS, SimConfig,
+                                  calibrated_decision_time,
+                                  exchange_worker_times, simulate)
+from repro.data.synthetic import WORKLOADS, CTRWorkload
+from repro.models import dlrm
+from repro.pipeline import (LookaheadWindow, PipelinedRunner, changed_ids,
+                            db_commit, db_init, staleness_bound, window_meta)
+from repro.ps import make_partition
+
+
+# --------------------------------------------------------------------------
+# window metadata
+# --------------------------------------------------------------------------
+class TestWindow:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 5), st.integers(1, 24), st.integers(0, 2 ** 31 - 1))
+    def test_meta_matches_oracle(self, W, width, seed):
+        rng = np.random.default_rng(seed)
+        batches = [rng.integers(-1, 20, int(rng.integers(0, width + 1)))
+                   for _ in range(W)]
+        meta = window_meta(batches)
+        sets = [set(int(x) for x in b if x != -1) for b in batches]
+        union = sorted(set().union(*sets)) if sets else []
+        assert meta.uids.tolist() == union
+        assert meta.total_touches == sum(len(s) for s in sets)
+        assert meta.dedup_saved == meta.total_touches - len(union)
+        for i, u in enumerate(meta.uids.tolist()):
+            occ = [t for t, s in enumerate(sets) if u in s]
+            assert meta.first_use[i] == occ[0]
+            assert meta.last_use[i] == occ[-1]
+            assert meta.touches[i] == len(occ)
+
+    def test_streaming_window(self):
+        items = [np.array([i, i + 1, -1]) for i in range(7)]
+        out = list(LookaheadWindow(iter(items), 3))
+        assert len(out) == 7
+        for idx, (item, meta) in enumerate(out):
+            np.testing.assert_array_equal(item, items[idx])
+            expect = window_meta(items[idx + 1: idx + 4])
+            np.testing.assert_array_equal(meta.uids, expect.uids)
+            np.testing.assert_array_equal(meta.first_use, expect.first_use)
+            assert meta.window == len(items[idx + 1: idx + 4])
+
+    def test_zero_window_and_key(self):
+        items = [(np.array([3, 3, 5]), "aux%d" % i) for i in range(3)]
+        out = list(LookaheadWindow(iter(items), 0, key=lambda b: b[0]))
+        assert [o[0][1] for o in out] == ["aux0", "aux1", "aux2"]
+        assert all(o[1].n_unique == 0 for o in out)
+        out2 = list(LookaheadWindow(iter(items), 2, key=lambda b: b[0]))
+        assert out2[0][1].uids.tolist() == [3, 5]
+
+
+# --------------------------------------------------------------------------
+# double buffer + staleness bound
+# --------------------------------------------------------------------------
+def _need_ids(rng, n, V, L):
+    ids = np.full((n, L), -1, np.int32)
+    for j in range(n):
+        u = np.unique(rng.integers(0, V, L))
+        ids[j, : len(u)] = u
+    return ids
+
+
+class TestDoubleBuffer:
+    def test_rotation(self):
+        db = db_init("s0")
+        assert (db.front, db.back) == ("s0", "s0")
+        db = db_commit(db, "s1")
+        assert (db.front, db.back) == ("s1", "s0")
+        db = db_commit(db, "s2")
+        assert (db.front, db.back) == ("s2", "s1")
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_staleness_bound_holds(self, seed):
+        rng = np.random.default_rng(seed)
+        n, V, L, k, F = 3, 64, 8, 12, 5
+        t_tran = rng.random(n) * 1e-3 + 1e-5
+        state = esd_sparse_init(n, V)
+        for _ in range(3):
+            state, _ = esd_state_update_sparse(
+                state, jnp.asarray(_need_ids(rng, n, V, L)))
+        state1, _ = esd_state_update_sparse(
+            state, jnp.asarray(_need_ids(rng, n, V, L)))
+        changed = changed_ids(state, state1)
+        samples = rng.integers(0, V, (k, F)).astype(np.int32)
+        samples[rng.random((k, F)) < 0.2] = -1
+        C0 = cost_matrix_sparse(samples, np.asarray(state.latest),
+                                np.asarray(state.dirty), t_tran)
+        C1 = cost_matrix_sparse(samples, np.asarray(state1.latest),
+                                np.asarray(state1.dirty), t_tran)
+        bound = staleness_bound(samples, changed, t_tran)
+        err = np.abs(C0 - C1).max(axis=1)
+        assert (err <= bound + 1e-12).all()
+        # a sample touching no changed id has exactly zero error
+        np.testing.assert_array_equal(err[bound == 0.0], 0.0)
+
+    def test_staleness_bound_multips(self, rng):
+        n, V, L, k, F, n_ps = 2, 60, 6, 8, 4, 2
+        part = make_partition(V, n_ps)
+        Vs = part.linear_size
+        t_ps = rng.random((n, n_ps)) * 1e-3 + 1e-5
+        state = esd_sparse_init(n, Vs)
+        for _ in range(2):
+            ids = part.to_linear(rng.integers(0, V, (n, L))).astype(np.int32)
+            ids = np.sort(ids, axis=1)
+            state, _ = esd_state_update_sparse(state, jnp.asarray(ids),
+                                               part=part)
+        ids1 = np.sort(part.to_linear(
+            rng.integers(0, V, (n, L))).astype(np.int32), axis=1)
+        state1, _ = esd_state_update_sparse(state, jnp.asarray(ids1),
+                                            part=part)
+        changed = changed_ids(state, state1)
+        samples = part.to_linear(rng.integers(0, V, (k, F))).astype(np.int32)
+        C0 = cost_matrix_sparse_ps(samples, np.asarray(state.latest),
+                                   np.asarray(state.dirty), t_ps, part,
+                                   linear=True)
+        C1 = cost_matrix_sparse_ps(samples, np.asarray(state1.latest),
+                                   np.asarray(state1.dirty), t_ps, part,
+                                   linear=True)
+        bound = staleness_bound(samples, changed, t_ps, part=part)
+        assert (np.abs(C0 - C1).max(axis=1) <= bound + 1e-12).all()
+
+
+# --------------------------------------------------------------------------
+# runner schedule semantics (pure-python stages)
+# --------------------------------------------------------------------------
+class TestRunnerSchedule:
+    def _stages(self, log):
+        def decide(state, batch):
+            log.append(("decide", batch, state))
+            return ("a%d" % batch, None)
+
+        def advance(state, batch, assign):
+            log.append(("advance", batch, state))
+            return ("x%d" % batch, state + 1, {})
+
+        def train(x):
+            log.append(("train", x))
+            return 0.0
+
+        return decide, advance, train
+
+    def test_exact_sees_committed_state(self):
+        log = []
+        decide, advance, train = self._stages(log)
+        r = PipelinedRunner(decide, advance, train, 0, depth=2)
+        r.run(range(4))
+        seen = [s for op, b, s in
+                [e for e in log if e[0] == "decide"]]
+        assert seen == [0, 1, 2, 3]       # state after t-1's advance
+        assert r.esd_state == 4
+        # every step trained exactly once, in order
+        assert [e[1] for e in log if e[0] == "train"] == \
+            ["x0", "x1", "x2", "x3"]
+
+    def test_stale_sees_back_buffer(self):
+        log = []
+        decide, advance, train = self._stages(log)
+        r = PipelinedRunner(decide, advance, train, 0, depth=2, stale=True)
+        r.run(range(4))
+        seen = [s for op, b, s in
+                [e for e in log if e[0] == "decide"]]
+        assert seen == [0, 0, 1, 2]       # one step behind the front
+        assert r.esd_state == 4
+
+    def test_depth_one_drains_immediately(self):
+        log = []
+        decide, advance, train = self._stages(log)
+        PipelinedRunner(decide, advance, train, 0, depth=1).run(range(3))
+        ops = [e[0] for e in log]
+        assert ops == ["decide", "advance", "train"] * 3
+
+    def test_invalid_args(self):
+        f = lambda *a: None
+        with pytest.raises(ValueError):
+            PipelinedRunner(f, f, f, 0, depth=0)
+        with pytest.raises(ValueError):
+            PipelinedRunner(f, f, f, 0, depth=1, stale=True)
+
+
+# --------------------------------------------------------------------------
+# bitwise pipelined-vs-synchronous training (the backbone invariant)
+# --------------------------------------------------------------------------
+def _run_stage_pipeline(depth, steps=5, lookahead=0, stale=False):
+    """The real jitted stages on a 1-device mesh, driven by the runner."""
+    from repro.launch.steps import make_dlrm_esd_stages
+    from repro.optim import get_optimizer
+
+    cfg = DLRM_CONFIGS["wdl-tiny"]
+    wl = WORKLOADS[cfg.workload]
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    n, m = 1, 16
+    V = wl.vocab
+    capacity = int(0.2 * V)
+    t_tran = jnp.asarray((cfg.embedding_dim * 4.0) / DEFAULT_BANDWIDTHS(n),
+                         jnp.float32)
+    decide, advance, realized, out_rows = make_dlrm_esd_stages(
+        mesh, n, m, V, t_tran, 0.0, capacity=capacity)
+    esd = esd_sparse_init(n, V, capacity, max_ids=out_rows * wl.width)
+
+    optimizer = get_optimizer("rowwise_adagrad", 1e-2)
+    params = dlrm.init_params(jax.random.key(0), cfg, wl)
+    opt_state = optimizer.init(params)
+
+    @jax.jit
+    def train_jit(params, opt_state, sparse, dense, labels):
+        loss, grads = jax.value_and_grad(dlrm.bce_loss)(
+            params, cfg, sparse, dense, labels)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    state = {"params": params, "opt": opt_state}
+
+    def train_fn(x):
+        state["params"], state["opt"], loss = train_jit(
+            state["params"], state["opt"], *x)
+        return loss
+
+    src = wl.stream(1, n * m)
+    if lookahead > 0:
+        batches = ((tuple(map(jnp.asarray, item)), meta) for item, meta
+                   in LookaheadWindow(src, lookahead, key=lambda b: b[0]))
+    else:
+        batches = ((tuple(map(jnp.asarray, item)), None) for item in src)
+
+    runner = PipelinedRunner(
+        lambda s, b: decide(s, b[0][0]),
+        lambda s, b, a: advance(s, *b[0], a),
+        train_fn, esd, depth=depth, stale=stale,
+        realized_cost_fn=(lambda s, b, a: realized(s, b[0][0], a))
+        if stale else None)
+    records = runner.run(batches, steps=steps,
+                         record_fn=lambda t, loss, aux, info: {
+                             "loss": float(loss),
+                             **{k: float(v) for k, v in info.items()}})
+    return records, runner.esd_state
+
+
+class TestBitwiseEquivalence:
+    def test_depths_and_window_identical(self):
+        sync, esd_sync = _run_stage_pipeline(depth=1)
+        for kwargs in (dict(depth=2), dict(depth=3),
+                       dict(depth=2, lookahead=3)):
+            piped, esd_piped = _run_stage_pipeline(**kwargs)
+            assert [r["loss"] for r in piped] == [r["loss"] for r in sync], \
+                kwargs
+            np.testing.assert_array_equal(np.asarray(esd_sync.latest),
+                                          np.asarray(esd_piped.latest))
+            np.testing.assert_array_equal(np.asarray(esd_sync.dirty),
+                                          np.asarray(esd_piped.dirty))
+            np.testing.assert_array_equal(np.asarray(esd_sync.slots),
+                                          np.asarray(esd_piped.slots))
+
+    def test_stale_first_step_exact_and_corrected(self):
+        recs, _ = _run_stage_pipeline(depth=2, stale=True)
+        assert all(np.isfinite(r["loss"]) for r in recs)
+        # step 0 decides on the same (initial) state in both modes
+        assert recs[0]["alg1_est"] == pytest.approx(
+            recs[0]["alg1_realized"], rel=1e-6)
+        assert all("alg1_realized" in r for r in recs)
+
+    def test_train_driver_depths_bitwise(self):
+        from repro.launch.train import main
+
+        common = ["--arch", "wdl-tiny", "--steps", "3",
+                  "--batch-per-worker", "8", "--esd-alpha", "0"]
+        sync = main(common + ["--pipeline-depth", "1"])
+        piped = main(common + ["--pipeline-depth", "2", "--lookahead", "2"])
+        assert [r["loss"] for r in sync] == [r["loss"] for r in piped]
+        assert [r["miss_pull"] for r in sync] == \
+            [r["miss_pull"] for r in piped]
+        assert all("window_dedup_frac" in r for r in piped)
+
+    def test_train_driver_cap_slack(self):
+        from repro.launch.train import main
+
+        metrics = main(["--arch", "wdl-tiny", "--steps", "3",
+                        "--batch-per-worker", "8", "--esd-alpha", "0",
+                        "--exchange", "ragged", "--cap-slack", "0.5",
+                        "--pipeline-depth", "2"])
+        assert len(metrics) == 3
+        assert all(np.isfinite(m["loss"]) for m in metrics)
+
+    def test_train_driver_guards(self):
+        from repro.launch.steps import make_dlrm_esd_stages
+        from repro.launch.train import main
+
+        # pipelining without ESD has no decision stage to hide
+        with pytest.raises(SystemExit):
+            main(["--arch", "wdl-tiny", "--steps", "1",
+                  "--batch-per-worker", "8", "--pipeline-depth", "2"])
+        # the stage factory enforces the same slack/exchange rule as
+        # esd_dispatch (padded cannot carry a relaxed capacity)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with pytest.raises(ValueError):
+            make_dlrm_esd_stages(mesh, 1, 16, 100, jnp.ones((1,)), 0.0,
+                                 exchange="padded", cap_slack=0.5)
+
+
+# --------------------------------------------------------------------------
+# PAD-masked DLRM loss (cap_slack satellite)
+# --------------------------------------------------------------------------
+class TestMaskedLoss:
+    def _batch(self, rng, wl, B):
+        return (wl.sample_batch(rng, B).astype(np.int32),
+                wl.dense_batch(rng, B), wl.label_batch(rng, B))
+
+    def test_all_valid_equals_plain(self, rng):
+        cfg = DLRM_CONFIGS["wdl-tiny"]
+        wl = WORKLOADS[cfg.workload]
+        params = dlrm.init_params(jax.random.key(1), cfg, wl)
+        s, d, l = self._batch(rng, wl, 12)
+        plain = dlrm.bce_loss(params, cfg, jnp.asarray(s), jnp.asarray(d),
+                              jnp.asarray(l))
+        masked = dlrm.bce_loss_masked(params, cfg, jnp.asarray(s),
+                                      jnp.asarray(d), jnp.asarray(l))
+        np.testing.assert_allclose(np.asarray(masked), np.asarray(plain),
+                                   rtol=1e-6)
+
+    def test_pad_rows_ignored(self, rng):
+        cfg = DLRM_CONFIGS["wdl-tiny"]
+        wl = WORKLOADS[cfg.workload]
+        params = dlrm.init_params(jax.random.key(1), cfg, wl)
+        s, d, l = self._batch(rng, wl, 8)
+        pad = 5
+        sp = np.concatenate([s, np.full((pad, s.shape[1]), -1, s.dtype)])
+        dp = np.concatenate([d, np.full((pad, d.shape[1]), -1.0, d.dtype)])
+        lp = np.concatenate([l, np.full((pad,), -1.0, l.dtype)])
+        masked = dlrm.bce_loss_masked(params, cfg, jnp.asarray(sp),
+                                      jnp.asarray(dp), jnp.asarray(lp))
+        plain_valid = dlrm.bce_loss(params, cfg, jnp.asarray(s),
+                                    jnp.asarray(d), jnp.asarray(l))
+        np.testing.assert_allclose(np.asarray(masked),
+                                   np.asarray(plain_valid), rtol=1e-6)
+        # PAD rows contribute no gradient to the tables
+        grads = jax.grad(dlrm.bce_loss_masked)(params, cfg, jnp.asarray(sp),
+                                               jnp.asarray(dp),
+                                               jnp.asarray(lp))
+        assert np.isfinite(np.asarray(grads["embed"])).all()
+
+
+# --------------------------------------------------------------------------
+# simulator: pipeline timing + lookahead + link-pair exchange pricing
+# --------------------------------------------------------------------------
+class TestSimulatorPipeline:
+    BASE = dict(n_workers=4, batch_per_worker=16, iters=12, warmup=3,
+                mechanism="esd", alpha=0.0, cache_ratio=0.4)
+
+    def test_depth_sum_vs_max(self):
+        wl = WORKLOADS["tiny"]
+        r1 = simulate(SimConfig(workload=wl, pipeline_depth=1, **self.BASE))
+        r2 = simulate(SimConfig(workload=wl, pipeline_depth=2, **self.BASE))
+        dec = calibrated_decision_time(self.BASE["batch_per_worker"],
+                                       self.BASE["alpha"])
+        train_stage = r1.per_iter_time - dec
+        np.testing.assert_allclose(r2.per_iter_time,
+                                   np.maximum(train_stage, dec), rtol=1e-12)
+        # timing-only change: transmission accounting identical
+        np.testing.assert_array_equal(r1.per_iter_cost, r2.per_iter_cost)
+        assert r1.hit_ratio == r2.hit_ratio
+        assert r1.itps <= r2.itps
+        assert r1.pipeline["depth"] == 1 and r2.pipeline["depth"] == 2
+
+    def test_lookahead_reduces_misses_zipf(self):
+        wl = CTRWorkload(name="zipf1.2", model="wdl",
+                         table_sizes=(50_000,) * 4 + (1_000,) * 8,
+                         zipf_a=(1.2,) * 12, hist_max=8, hist_mean=4.0)
+        base = dict(workload=wl, n_workers=8, batch_per_worker=64,
+                    cache_ratio=0.005, iters=16, warmup=4,
+                    mechanism="esd", alpha=0.0, policy="lru")
+        r0 = simulate(SimConfig(lookahead=0, **base))
+        r4 = simulate(SimConfig(lookahead=4, **base))
+        assert r4.pipeline["miss_pull_total"] < r0.pipeline["miss_pull_total"]
+        assert r4.pipeline["dedup_saved_ops"] > 0
+        assert r0.pipeline["dedup_saved_ops"] == 0
+
+    def test_lookahead_multips_runs(self):
+        wl = WORKLOADS["tiny"]
+        r = simulate(SimConfig(workload=wl, lookahead=3, n_ps=2,
+                               ps_layout="hashed", **self.BASE))
+        assert np.isfinite(r.cost)
+
+    def test_exchange_link_pricing_oracle(self, rng):
+        n = 5
+        link_bytes = rng.integers(0, 1000, (n, n)).astype(np.int64)
+        bw = rng.random(n) * 1e9 + 1e8
+        got = exchange_worker_times(link_bytes, bw)
+        expect = np.zeros(n)
+        for i in range(n):
+            for j in range(n):
+                if i == j:
+                    continue
+                t = link_bytes[i, j] / min(bw[i], bw[j])
+                expect[i] += t
+                expect[j] += t
+        np.testing.assert_allclose(got, expect, rtol=1e-12)
+
+    def test_exchange_self_link_free_and_bottleneck(self):
+        bw = np.array([1e9, 1e8])
+        only_self = np.diag([500, 700]).astype(np.int64)
+        np.testing.assert_array_equal(
+            exchange_worker_times(only_self, bw), 0.0)
+        one_link = np.zeros((2, 2), np.int64)
+        one_link[0, 1] = 1000
+        t = exchange_worker_times(one_link, bw)
+        np.testing.assert_allclose(t, [1000 / 1e8, 1000 / 1e8])
