@@ -1,0 +1,138 @@
+"""Elastic-cluster benchmark: churn scenarios vs the static oracle.
+
+Four fault scenarios over a Zipf-1.2 CTR stream (ESD mechanism, ragged
+exchange — the only wire format a dead worker leaves intact), written to
+benchmarks/results/BENCH_elastic.json:
+
+  * ``worker_loss`` — one worker crashes gracefully at t and never
+    returns: the survivors absorb its share (static elastic capacity, no
+    reshape), throughput degrades by ~1/n instead of collapsing.
+  * ``crash_rejoin`` — graceful crash at t, warm rejoin at 2t: the
+    rejoiner is re-seeded with the hottest clean rows (cache handoff)
+    and the tail of the run must recover to near-oracle step time.
+  * ``flash_crowd`` — three simultaneous crashes, staggered rejoins:
+    the worst planned loss the dispatch capacity was sized for.
+  * ``diurnal`` — staggered per-worker bandwidth droop windows (edge
+    links fading in and out): Alg. 1 re-prices columns every step, so
+    cost rises smoothly and no worker stalls the BSP barrier for long.
+
+Each scenario reports throughput as a fraction of the no-fault oracle on
+the same stream.  ``--quick`` runs a reduced sweep into
+BENCH_elastic_quick.json (untracked) and doubles as the CI fault smoke:
+it asserts finite loss-side stats, a crash-and-rejoin run that keeps
+>= 70% of oracle throughput, and a recovered post-rejoin tail.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import SimConfig, simulate
+from repro.data.synthetic import CTRWorkload
+from repro.elastic import FaultPlan
+
+RESULTS = Path(__file__).parent / "results"
+N = 8
+
+
+def _workload(a: float = 1.2) -> CTRWorkload:
+    return CTRWorkload(name=f"zipf{a}", model="wdl",
+                       table_sizes=(50_000,) * 4 + (1_000,) * 8,
+                       zipf_a=(a,) * 12, hist_max=8, hist_mean=4.0)
+
+
+def _base(iters: int) -> dict:
+    return dict(workload=_workload(), n_workers=N, batch_per_worker=32,
+                cache_ratio=0.02, iters=iters, warmup=max(2, iters // 5),
+                mechanism="esd", alpha=1.0, exchange="ragged",
+                compute_time_s=0.010)
+
+
+def _summary(r, oracle) -> dict:
+    return {
+        "itps": r.itps,
+        "frac_of_oracle": r.itps / oracle.itps,
+        "cost": r.cost,
+        "hit_ratio": r.hit_ratio,
+        "iter_mean_s": float(np.mean(r.per_iter_time)),
+        "min_active": r.elastic["min_active"],
+        "flush_push_ops": r.elastic["flush_push_ops"],
+        "handoff_rows": r.elastic["handoff_rows"],
+        "handoff_time_s": r.elastic["handoff_time_s"],
+    }
+
+
+def bench_scenarios(iters: int) -> dict:
+    base = _base(iters)
+    t1, t2 = iters // 3, 2 * iters // 3
+    oracle = simulate(SimConfig(**base))
+
+    plans = {
+        "worker_loss": f"crash@{t1}:1g",
+        "crash_rejoin": f"crash@{t1}:1g; rejoin@{t2}:1w",
+        "flash_crowd": (f"crash@{t1}:1g; crash@{t1}:2g; crash@{t1}:5g; "
+                        f"rejoin@{t2}:1w; rejoin@{t2}:2w; "
+                        f"rejoin@{min(t2 + 2, iters)}:5w"),
+        "diurnal": "; ".join(
+            f"bw@{(j * iters) // N}:{j}x0.3-"
+            f"{(j * iters) // N + max(iters // 4, 1)}" for j in range(N)),
+    }
+    out = {"oracle": {"itps": oracle.itps, "cost": oracle.cost,
+                      "hit_ratio": oracle.hit_ratio,
+                      "iter_mean_s": float(np.mean(oracle.per_iter_time))}}
+    for name, spec in plans.items():
+        plan = FaultPlan.parse(spec, N)
+        r = simulate(SimConfig(faults=plan, **base))
+        row = _summary(r, oracle)
+        if name == "crash_rejoin":
+            # post-rejoin tail must recover to ~oracle step time
+            tail = slice(t2 + 1, iters)
+            row["tail_iter_mean_s"] = float(np.mean(r.per_iter_time[tail]))
+            row["tail_vs_oracle"] = row["tail_iter_mean_s"] / float(
+                np.mean(oracle.per_iter_time[tail]))
+        out[name] = row
+    return out
+
+
+def run(quick: bool = False, out: Path | None = None) -> dict:
+    if out is None:
+        out = RESULTS / ("BENCH_elastic_quick.json" if quick
+                         else "BENCH_elastic.json")
+    iters = 12 if quick else 48
+    report = {"config": {"zipf_a": 1.2, "iters": iters, "n_workers": N,
+                         "mechanism": "esd", "exchange": "ragged"},
+              "scenarios": bench_scenarios(iters)}
+    sc = report["scenarios"]
+    for name, row in sc.items():
+        if name == "oracle":
+            print(f"elastic.oracle,{row['itps']:.2f}itps,"
+                  f"iter={row['iter_mean_s'] * 1e3:.1f}ms")
+            continue
+        print(f"elastic.{name},{row['frac_of_oracle'] * 100:.0f},"
+              f"itps={row['itps']:.2f},"
+              f"min_active={row['min_active']},"
+              f"handoff_rows={row['handoff_rows']}")
+    # CI smoke gates (ISSUE 6): finite stats, survivors keep >= 70% of
+    # oracle throughput through a crash, tail recovers after the rejoin
+    for name, row in sc.items():
+        vals = [v for v in row.values() if isinstance(v, float)]
+        assert all(np.isfinite(vals)), (name, row)
+    cr = sc["crash_rejoin"]
+    assert cr["frac_of_oracle"] >= 0.70, cr
+    assert cr["min_active"] == N - 1, cr
+    assert cr["tail_vs_oracle"] <= 1.10, cr
+    assert sc["flash_crowd"]["min_active"] == N - 3, sc["flash_crowd"]
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -40,16 +40,18 @@ done
 # fast pre-test gate: import-time/syntax breakage fails in seconds, not
 # mid-suite — byte-compile every tree we ship, one end-to-end quickstart
 # pass (exercises core cost/dispatch/cache on a real batch), the quick
-# ragged-exchange sweep (plan bytes + slack Alg.-1 drop) and the quick
-# pipeline sweep (decision hiding + lookahead miss reduction); both
-# quick sweeps write *_quick.json artifacts, never the tracked
-# full-sweep records
+# ragged-exchange sweep (plan bytes + slack Alg.-1 drop), the quick
+# pipeline sweep (decision hiding + lookahead miss reduction) and the
+# quick elastic sweep (fault-injection smoke: crash + rejoin must keep
+# >= 70% of oracle throughput with finite stats); the quick sweeps write
+# *_quick.json artifacts, never the tracked full-sweep records
 t0=$SECONDS
 python -m compileall -q src benchmarks examples tests
 python examples/quickstart.py > /dev/null
 python -m benchmarks.dispatch_bench --exchange --quick
 python -m benchmarks.pipeline_bench --quick
-echo "pre-test gate (compileall + quickstart + exchange/pipeline smoke): $((SECONDS - t0))s"
+python -m benchmarks.elastic_bench --quick
+echo "pre-test gate (compileall + quickstart + exchange/pipeline/elastic smoke): $((SECONDS - t0))s"
 
 t0=$SECONDS
 env "${TEST_ENV[@]}" python -m pytest -q --durations=10

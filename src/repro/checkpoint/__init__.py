@@ -3,9 +3,22 @@
 Sharding-aware in the simple way that works everywhere: leaves are
 ``jax.device_get`` (gathered to host) on save and re-placed by the caller's
 shardings on restore.  Step metadata rides along.  No orbax dependency.
+
+Crash-safe by construction: a save writes ``ckpt_NNNNNNNN.tmp.npz`` and
+renames only when complete, so a kill mid-save leaves a ``.tmp`` file —
+never a truncated ``ckpt_NNNNNNNN.npz``.  Discovery (:func:`latest_step`)
+matches the final names exactly (a leftover ``.tmp`` is skipped, and the
+next successful save cleans it up), and :func:`restore_checkpoint` with
+``step=None`` falls back to the previous checkpoint if the newest archive
+turns out unreadable anyway (e.g. torn by the filesystem) — structural
+mismatches (wrong shapes, missing leaves) are real errors and always
+propagate, naming the offending leaf path.
 """
 from __future__ import annotations
 
+import re
+import warnings
+import zipfile
 from pathlib import Path
 from typing import Any
 
@@ -15,24 +28,40 @@ import numpy as np
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
 
 _SEP = "::"
+_CKPT_RE = re.compile(r"ckpt_(\d{8})\.npz")
+
+
+def _key(path) -> str:
+    """Flat string key for one pytree path: DictKey (.key), SequenceKey
+    (.idx), and GetAttrKey (.name — registered dataclasses like
+    SparseEsdState) all flatten to their natural label."""
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
-        )
         arr = np.asarray(jax.device_get(leaf))
         if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16/f8): store as f32
             arr = arr.astype(np.float32)
-        flat[key] = arr
+        flat[_key(path)] = arr
     return flat
 
 
 def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
+    # a crashed earlier save may have left partial .tmp files behind
+    for stale in directory.glob("ckpt_*.tmp.npz"):
+        stale.unlink(missing_ok=True)
     path = directory / f"ckpt_{step:08d}.npz"
     tmp = path.with_suffix(".tmp.npz")
     np.savez(tmp, __step__=np.int64(step), **_flatten(tree))
@@ -40,31 +69,62 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
     return path
 
 
+def _steps(directory: Path) -> list[int]:
+    """Completed checkpoint steps, ascending (``.tmp`` leftovers and any
+    other stray ``ckpt_*`` names are not checkpoints)."""
+    steps = []
+    for f in directory.glob("ckpt_*.npz"):
+        mt = _CKPT_RE.fullmatch(f.name)
+        if mt:
+            steps.append(int(mt.group(1)))
+    return sorted(steps)
+
+
 def latest_step(directory: str | Path) -> int | None:
-    directory = Path(directory)
-    ckpts = sorted(directory.glob("ckpt_*.npz"))
-    if not ckpts:
-        return None
-    return int(ckpts[-1].stem.split("_")[1])
+    steps = _steps(Path(directory))
+    return steps[-1] if steps else None
+
+
+def _load_leaves(path: Path, flat_paths) -> list[np.ndarray]:
+    with np.load(path) as data:
+        leaves = []
+        for tree_path, leaf in flat_paths:
+            key = _key(tree_path)
+            if key not in data:
+                raise KeyError(
+                    f"{path.name} has no entry for leaf {key!r}")
+            arr = data[key]
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
+    return leaves
 
 
 def restore_checkpoint(directory: str | Path, tree_like: Any,
                        step: int | None = None) -> tuple[Any, int]:
-    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    """Restore into the structure of ``tree_like`` (shapes must match).
+
+    With ``step=None`` the newest completed checkpoint is used; if its
+    archive is unreadable (truncated/torn), older checkpoints are tried
+    in turn — only *archive* corruption triggers the fallback, a shape
+    mismatch or missing leaf is a caller bug and raises immediately.
+    """
     directory = Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    data = np.load(directory / f"ckpt_{step:08d}.npz")
-    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
-    leaves = []
-    for path, leaf in paths:
-        key = _SEP.join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
-        )
-        arr = data[key]
-        if arr.shape != tuple(leaf.shape):
-            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
-        leaves.append(arr.astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+    flat_paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    if step is not None:
+        leaves = _load_leaves(directory / f"ckpt_{step:08d}.npz", flat_paths)
+        return jax.tree_util.tree_unflatten(treedef, leaves), step
+    candidates = _steps(directory)
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    for s in reversed(candidates):
+        path = directory / f"ckpt_{s:08d}.npz"
+        try:
+            leaves = _load_leaves(path, flat_paths)
+        except (zipfile.BadZipFile, EOFError, OSError) as e:
+            warnings.warn(f"skipping unreadable checkpoint {path.name}: {e}",
+                          RuntimeWarning, stacklevel=2)
+            continue
+        return jax.tree_util.tree_unflatten(treedef, leaves), s
+    raise FileNotFoundError(f"no readable checkpoint in {directory} "
+                            f"(tried steps {candidates})")

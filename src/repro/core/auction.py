@@ -116,11 +116,25 @@ def _repair(cost, eps, state):
     afterwards because prices never decrease, so checking at repair time is
     sufficient; the final assignment therefore satisfies eps_final-CS,
     giving the standard optimality bound k * eps_final.
+
+    Ownerless slots are repriced to zero first ("dead capital"): in the
+    asymmetric problem (k < capacity * n) a tie war in a coarse phase can
+    ratchet prices on every slot of a worker, and if those owners are then
+    displaced or repaired away the inflated price survives with no bidder
+    supporting it.  min_price then overstates the cost of genuinely free
+    capacity, eps-CS holds against the stale prices, and rows converge
+    onto arbitrarily worse columns (e.g. a crashed worker's penalty column
+    in repro.elastic).  An unsupported price carries no information —
+    dropping it restores the free-slot-at-zero equilibrium the optimality
+    argument assumes.  Callers iterate repair + rebid at the final eps
+    until it is a no-op (see auction_fixed / auction_solve).
     """
     assign, slot_prices, slot_owner = state
     k, n = cost.shape
     m = slot_prices.shape[1]
     benefit = -cost
+    slot_prices = jnp.where(slot_owner < 0,
+                            jnp.zeros_like(slot_prices), slot_prices)
     min_price = jnp.min(slot_prices, axis=1)               # (n,)
     best_alt = jnp.max(benefit - min_price[None, :], axis=1)  # (k,)
 
@@ -136,6 +150,8 @@ def _repair(cost, eps, state):
     slot_owner = jnp.where(
         violate_flat.reshape(n, m), -1, slot_owner
     )
+    slot_prices = jnp.where(violate_flat.reshape(n, m),
+                            jnp.zeros_like(slot_prices), slot_prices)
     return assign, slot_prices, slot_owner
 
 
@@ -160,7 +176,9 @@ def auction_solve(
     while e > eps:
         phases.append(e)
         e /= scaling
-    phases.append(eps)
+    # terminal phases at eps_final: repair reprices freed dead capital to
+    # zero, so repair + rebid must rerun until it is a no-op
+    phases.extend([eps, eps, eps])
     state = (
         jnp.full((k,), -1, jnp.int32),
         jnp.zeros((n, capacity), cost.dtype),

@@ -16,24 +16,30 @@ import numpy as np
 from .cache import ClusterCache, IterStats, init_ps_stats, ps_op_count
 from .heu import heu_dispatch
 
-__all__ = ["laia_dispatch", "random_dispatch", "HETCache", "FAECache"]
+__all__ = ["laia_dispatch", "random_dispatch", "random_dispatch_active",
+           "HETCache", "FAECache"]
 
 
 def laia_dispatch(
     samples: np.ndarray,
     latest_in_cache: np.ndarray,
     maxworkload: int,
+    active: np.ndarray | None = None,
 ) -> np.ndarray:
     """LAIA: dispatch each sample to the worker with the highest relevance
     score = number of its ids already cached (latest), under workload caps.
 
     Implemented as greedy max-score == greedy min(-score) with the same
-    capacity fall-through as Heu."""
+    capacity fall-through as Heu.  ``active`` (elastic clusters) sinks
+    dead workers' scores so no sample lands on them — the caller must
+    raise ``maxworkload`` so the survivors can absorb the load."""
     k, F = samples.shape
     valid = samples >= 0
     ids = np.where(valid, samples, 0)
     hits = latest_in_cache[:, ids]                      # (n, k, F)
     score = (hits & valid[None]).sum(axis=2).T.astype(np.float64)  # (k, n)
+    if active is not None and not np.asarray(active, bool).all():
+        score = np.where(np.asarray(active, bool)[None, :], score, -1e18)
     # process highest-scoring rows first so strong affinities win slots
     order = np.argsort(-score.max(axis=1), kind="stable")
     return heu_dispatch(-score, maxworkload, order=order)
@@ -42,6 +48,25 @@ def laia_dispatch(
 def random_dispatch(k: int, n: int, rng: np.random.Generator) -> np.ndarray:
     """Vanilla dispatch: random permutation into n equal micro-batches."""
     assign = np.repeat(np.arange(n), k // n)
+    rng.shuffle(assign)
+    return assign
+
+
+def random_dispatch_active(k: int, active: np.ndarray,
+                           rng: np.random.Generator) -> np.ndarray:
+    """Random dispatch over the active workers only: k samples split as
+    evenly as integers allow across ``active.sum()`` workers, then
+    shuffled.  With every worker active the repeat layout (and hence the
+    shuffled result for a given rng state) is exactly
+    :func:`random_dispatch` — the no-fault path stays bitwise-pinned."""
+    active = np.asarray(active, bool)
+    act = np.where(active)[0]
+    n_a = len(act)
+    if n_a == 0:
+        raise ValueError("no active workers to dispatch to")
+    counts = np.full(n_a, k // n_a, np.int64)
+    counts[: k - int(counts.sum())] += 1
+    assign = np.repeat(act, counts)
     rng.shuffle(assign)
     return assign
 
@@ -134,6 +159,11 @@ class HETCache(ClusterCache):
 
     def _evict_key(self, j, cand):  # LRU inside HET
         return self.last_access[j, cand].astype(np.float64)
+
+    def _clear_worker(self, j: int) -> None:
+        # HET's extra per-worker clocks reset with the plane rows
+        self.lag[j] = 0
+        self.dirty_cnt[j] = 0
 
 
 class FAECache:

@@ -360,6 +360,83 @@ class ClusterCache:
         mmax = float(self.target[j]) + 1.0
         return (version * mmax * fmax * 2.0) + (mark * fmax) + freq
 
+    # -- elastic membership (repro.elastic) ----------------------------------
+    def crash(self, worker: int, graceful: bool = False) -> dict:
+        """Remove worker ``worker`` from the cluster.
+
+        ``graceful=True`` models an announced departure: the worker first
+        pushes every dirty row to the PS (an update-push per row — the
+        returned ``flushed`` ids/counts let the simulator charge it), so
+        other copies of those ids go stale exactly as in phase A; its
+        remaining ``present & latest`` rows are returned as ``inventory``
+        for a :func:`repro.elastic.membership.departure_handoff`.
+
+        A hard crash (default) drops the unsynced gradients silently —
+        the PS's pre-gradient version becomes canonical (no worker keeps
+        ``latest`` for those ids once the crasher's rows are cleared;
+        the next needer re-pulls the old value, which is exactly the
+        lost-update semantics of a real failure).
+
+        Either way the worker's plane rows are zeroed (a rejoin is cold
+        unless warmed by a handoff) and its Emark clock resets.
+        """
+        j = worker
+        out = {"flushed": np.zeros(0, np.int64),
+               "inventory": np.zeros(0, np.int64)}
+        if self.part is not None:
+            out["flushed_ps"] = np.zeros(self.part.n_ps, np.int64)
+        if graceful:
+            flushed = np.where(self.dirty[j])[0].astype(np.int64)
+            if len(flushed):
+                others = np.arange(self.n) != j
+                self.latest[np.ix_(others, flushed)] = False
+                self.dirty[j, flushed] = False
+                out["flushed"] = flushed
+                if self.part is not None:
+                    out["flushed_ps"] = self._ps_count(flushed)
+            out["inventory"] = np.where(
+                self.present[j] & self.latest[j])[0].astype(np.int64)
+        self.present[j] = False
+        self.latest[j] = False
+        self.dirty[j] = False
+        self.freq[j] = 0
+        self.last_access[j] = 0
+        self.mark[j] = 0
+        self.target[j] = 1
+        self._clear_worker(j)
+        return out
+
+    def seed_rows(self, worker: int, ids: np.ndarray) -> np.ndarray:
+        """Admit latest & clean copies of ``ids`` (priority order) into
+        worker ``worker``'s *free* capacity — no evictions, already
+        present ids are skipped.  Returns the ids actually seeded.
+
+        This is the receiving half of a cache handoff: callers pass ids
+        some peer holds present & latest & clean, so marking the new
+        copies ``latest`` is sound.  Seeded rows carry a fresh
+        ``last_access`` but mark epoch 0 — under Emark a gift row is the
+        first eviction candidate until the worker actually uses it.
+        """
+        j = worker
+        ids = np.asarray(ids, np.int64)
+        if not len(ids):
+            return ids
+        new = ids[~self.present[j, ids]]
+        free = self.capacity - int(self.present[j].sum())
+        sel = new[: max(free, 0)]
+        if len(sel):
+            self.present[j, sel] = True
+            self.latest[j, sel] = True
+            self.last_access[j, sel] = self.it
+            self._note_seeded(j, sel)
+        return sel
+
+    def _clear_worker(self, j: int) -> None:
+        """Subclass hook: drop per-worker side structures on crash."""
+
+    def _note_seeded(self, j: int, sel: np.ndarray) -> None:
+        """Subclass hook: record freshly seeded ids in side structures."""
+
     # -- warm start ----------------------------------------------------------
     def prefill(self, hot_ids: np.ndarray):
         """Fill every cache with (up to capacity) given ids, latest & clean."""
@@ -561,6 +638,43 @@ class SparseClusterCache(ClusterCache):
         resident = np.fromiter(self._resident[j], np.int64,
                                len(self._resident[j]))
         return self._select_victims(j, cand, resident, count, protect=protect)
+
+    # -- elastic membership (repro.elastic) ----------------------------------
+    def seed_rows(self, worker: int, ids: np.ndarray) -> np.ndarray:
+        if self.capacity_ps is None:
+            return super().seed_rows(worker, ids)
+        # per-PS budgets: fill each shard's free slots in priority order
+        j = worker
+        ids = np.asarray(ids, np.int64)
+        if not len(ids):
+            return ids
+        new = ids[~self.present[j, ids]]
+        shard = self.part.shard_of_linear(new)
+        take = np.zeros(len(new), bool)
+        for p in range(self.part.n_ps):
+            free_p = int(self.capacity_ps[p]) - len(self._resident_ps[j][p])
+            idx = np.where(shard == p)[0]
+            take[idx[: max(free_p, 0)]] = True
+        sel = new[take]
+        if len(sel):
+            self.present[j, sel] = True
+            self.latest[j, sel] = True
+            self.last_access[j, sel] = self.it
+            self._note_seeded(j, sel)
+        return sel
+
+    def _clear_worker(self, j: int) -> None:
+        self._resident[j] = set()
+        self._dirtyset[j] = set()
+        if self.capacity_ps is not None:
+            self._resident_ps[j] = [set() for _ in range(self.part.n_ps)]
+
+    def _note_seeded(self, j: int, sel: np.ndarray) -> None:
+        self._resident[j].update(sel.tolist())
+        if self.capacity_ps is not None:
+            shard = self.part.shard_of_linear(sel)
+            for p in range(self.part.n_ps):
+                self._resident_ps[j][p].update(sel[shard == p].tolist())
 
     # -- warm start ----------------------------------------------------------
     def prefill(self, hot_ids: np.ndarray):

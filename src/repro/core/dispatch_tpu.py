@@ -119,7 +119,11 @@ def auction_fixed(C, capacity: int, n_phases: int = 7,
     )
 
     def phase(p, state):
-        eps = span / 2.0 / (6.0 ** p.astype(jnp.float32))
+        # clamp: extra terminal phases rerun repair + rebid at eps_final
+        # until it fixes (repair reprices freed "dead capital" to zero,
+        # so one pass after a tie war can still leave movable rows)
+        e_pow = jnp.minimum(p, n_phases - 1).astype(jnp.float32)
+        eps = span / 2.0 / (6.0 ** e_pow)
         state = jax.lax.cond(p > 0, lambda s: _repair(C, eps, s),
                              lambda s: s, state)
 
@@ -134,7 +138,8 @@ def auction_fixed(C, capacity: int, n_phases: int = 7,
         state, _ = jax.lax.while_loop(cond, body, (state, 0))
         return state
 
-    state = jax.lax.fori_loop(0, n_phases, lambda p, s: phase(p, s), state)
+    state = jax.lax.fori_loop(0, n_phases + 2,
+                              lambda p, s: phase(p, s), state)
     return state[0]
 
 
@@ -559,28 +564,40 @@ def exchange_budget(cap: int, m: int) -> int:
 
 
 def esd_cost_matrix(samples, state, t_tran, use_pallas: bool = False,
-                    sparse_cost: bool = True, part=None):
+                    sparse_cost: bool = True, part=None, col_bias=None):
     """This shard's (m, n) Alg. 1 cost matrix under ``state`` — the
     branch selection shared by :func:`esd_decide` and the pipeline's
     commit-time re-score (``repro.pipeline``: score a *stale* decision
-    against the state it actually committed on)."""
+    against the state it actually committed on).
+
+    ``col_bias`` (elastic clusters, ``repro.elastic.cost_column_bias``):
+    an (n,) per-worker additive term — straggler excess compute, or the
+    finite dead-worker penalty.  Passed as an *array* so churn changes
+    values, never shapes (no recompile); ``None`` and an all-zero bias
+    are bitwise-identical (costs are >= 0, so ``C + 0.0`` is identity).
+    """
     if part is not None and part.n_ps > 1:
         if use_pallas:
             _warn_pallas_ps_fallback()
-        return cost_matrix_sparse_ps_jnp(samples, state.latest, state.dirty,
-                                         t_tran, part, linear=True)
-    if use_pallas:
+        C = cost_matrix_sparse_ps_jnp(samples, state.latest, state.dirty,
+                                      t_tran, part, linear=True)
+    elif use_pallas:
         from ..kernels.ops import cost_matrix_pallas, cost_matrix_pallas_sparse
         kern = cost_matrix_pallas_sparse if sparse_cost else cost_matrix_pallas
-        return kern(samples, state.latest, state.dirty, t_tran)
-    fn = cost_matrix_sparse_jnp if sparse_cost else cost_matrix_jnp
-    return fn(samples, state.latest, state.dirty, t_tran)
+        C = kern(samples, state.latest, state.dirty, t_tran)
+    else:
+        fn = cost_matrix_sparse_jnp if sparse_cost else cost_matrix_jnp
+        C = fn(samples, state.latest, state.dirty, t_tran)
+    if col_bias is not None:
+        C = C + col_bias[None, :].astype(C.dtype)
+    return C
 
 
 def esd_decide(samples, state, t_tran, alpha: float,
                axis_name: str = "data", use_pallas: bool = False,
                sparse_cost: bool = True, part=None,
-               cap_slack: float = 0.0, with_cost: bool = False):
+               cap_slack: float = 0.0, with_cost: bool = False,
+               col_bias=None, cap: int | None = None):
     """The decision half of :func:`esd_dispatch`: Alg. 1 cost matrix +
     hybrid assignment, no wire movement.
 
@@ -590,13 +607,21 @@ def esd_decide(samples, state, t_tran, alpha: float,
     ``with_cost`` — ``alg1`` is this shard's Alg.-1 objective of the
     chosen assignment (sum of C[i, assign[i]]), the number a stale
     decision's commit-time correction re-scores.
+
+    Elastic clusters: ``col_bias`` biases the cost columns (see
+    :func:`esd_cost_matrix`) and ``cap`` overrides the default
+    ``dispatch_cap(m, n, cap_slack)`` — a churn-tolerant driver must
+    raise the static capacity so the survivors of the worst planned
+    simultaneous loss can absorb every sample without a reshape.
     """
     m, F = samples.shape
     # constant-folds to the static mesh axis size at trace time
     n = jax.lax.psum(1, axis_name)
     C = esd_cost_matrix(samples, state, t_tran, use_pallas=use_pallas,
-                        sparse_cost=sparse_cost, part=part)
-    cap = dispatch_cap(m, n, cap_slack)
+                        sparse_cost=sparse_cost, part=part,
+                        col_bias=col_bias)
+    if cap is None:
+        cap = dispatch_cap(m, n, cap_slack)
     assign = hybrid_dispatch_jax(C, m, alpha, cap=cap)
     if with_cost:
         alg1 = jnp.take_along_axis(C, assign[:, None], axis=1)[:, 0].sum()
@@ -607,7 +632,8 @@ def esd_decide(samples, state, t_tran, alpha: float,
 def esd_dispatch(samples, state, t_tran, alpha: float,
                  axis_name: str = "data", use_pallas: bool = False,
                  sparse_cost: bool = True, part=None,
-                 cap_slack: float = 0.0, exchange: str = "padded"):
+                 cap_slack: float = 0.0, exchange: str = "padded",
+                 col_bias=None):
     """Inside shard_map over ``axis_name``: dispatch this shard's samples.
 
     samples: (m, F) local ids.  Returns (exchanged_samples, assign).
@@ -649,7 +675,7 @@ def esd_dispatch(samples, state, t_tran, alpha: float,
     n = jax.lax.psum(1, axis_name)
     assign = esd_decide(samples, state, t_tran, alpha, axis_name=axis_name,
                         use_pallas=use_pallas, sparse_cost=sparse_cost,
-                        part=part, cap_slack=cap_slack)
+                        part=part, cap_slack=cap_slack, col_bias=col_bias)
     cap = dispatch_cap(m, n, cap_slack)
     if exchange == "ragged":
         from ..exchange.ragged import ragged_exchange

@@ -71,7 +71,8 @@ import numpy as np
 from ..data.synthetic import CTRWorkload
 from ..exchange.plan import compile_plan
 from ..ps import make_partition
-from .baselines import FAECache, HETCache, laia_dispatch, random_dispatch
+from .baselines import (FAECache, HETCache, laia_dispatch, random_dispatch,
+                        random_dispatch_active)
 from .cache import ClusterCache, IterStats, SparseClusterCache
 from .cost import (batch_unique_np, cost_from_state_cols,
                    cost_from_state_cols_ps, cost_matrix_np,
@@ -157,6 +158,12 @@ class SimConfig:
     # (repro.pipeline.window); W = 0 keeps the cache bitwise.
     pipeline_depth: int = 2
     lookahead: int = 0
+    # fault injection (repro.elastic.FaultPlan): scripted/stochastic worker
+    # crash/rejoin, straggler slowdown, bandwidth droop, PS-shard outage.
+    # None (default) is the unchanged static-cluster path; an *empty* plan
+    # runs the elastic code path with neutral values and is bitwise-equal
+    # to None (pinned in tests).
+    faults: "object | None" = None
 
     @property
     def d_tran(self) -> float:
@@ -200,6 +207,9 @@ class SimResult:
     exchange: dict | None = None
     # stage breakdown + lookahead-window dedup accounting (always set)
     pipeline: dict | None = None
+    # fault/churn accounting (SimConfig.faults set): events applied, flush
+    # pushes, handoff rows/time, worst-case surviving worker count
+    elastic: dict | None = None
 
     def summary(self) -> dict:
         out = {
@@ -212,6 +222,8 @@ class SimResult:
             out["alg1_cost"] = self.alg1_cost
         if self.exchange is not None:
             out["exchange"] = self.exchange
+        if self.elastic is not None:
+            out["elastic"] = self.elastic
         if self.pipeline is not None and (
                 self.pipeline["depth"] == 1 or self.pipeline["lookahead"]):
             out["pipeline"] = self.pipeline
@@ -295,6 +307,27 @@ def simulate(cfg: SimConfig) -> SimResult:
         raise ValueError(f"pipeline_depth must be >= 1, got "
                          f"{cfg.pipeline_depth}")
     cache = _make_cache(cfg, hot_ids, vocab=vocab, part=part)
+
+    faults = cfg.faults
+    elastic_acc = None
+    if faults is not None:
+        from ..elastic import (cost_column_bias, departure_handoff,
+                               effective_t, rejoin_handoff)
+        if faults.n_workers != n:
+            raise ValueError(f"FaultPlan is for {faults.n_workers} workers, "
+                             f"simulating {n}")
+        if faults.n_ps > 1 and (part is None or faults.n_ps != part.n_ps):
+            raise ValueError(f"FaultPlan targets {faults.n_ps} PS shards, "
+                             f"simulating {1 if part is None else part.n_ps}")
+        churn = any(e.kind in ("crash", "rejoin") for e in faults.events)
+        if churn and not hasattr(cache, "crash"):
+            raise ValueError(f"mechanism {cfg.mechanism!r}'s cache model "
+                             "does not support membership churn")
+        elastic_acc = {"events": [e.to_dict() for e in faults.events
+                                  if e.step < cfg.iters],
+                       "flush_push_ops": 0, "handoff_rows": 0,
+                       "handoff_time_s": 0.0, "min_active": n}
+
     stream = cfg.workload.stream(cfg.seed + 1, k)
     if cfg.lookahead > 0:
         from ..pipeline.window import LookaheadWindow
@@ -332,6 +365,50 @@ def simulate(cfg: SimConfig) -> SimResult:
         if use_ps:
             samples = part.to_linear(samples)
 
+        # elastic: apply this step's membership transitions to the cache,
+        # derive the step's effective link times / bandwidths, and price
+        # the flush + handoff traffic the transitions imply
+        cs = None
+        t_it, tps_it, bw_it, handoff_t = t_tran, t_ps, bw, 0.0
+        if faults is not None:
+            cs = faults.state_at(it)
+            elastic_acc["min_active"] = min(elastic_acc["min_active"],
+                                            cs.n_active)
+            bw_it = bw * cs.bw_factor
+            if use_ps:
+                tps_it = effective_t(t_ps, cs)
+            else:
+                t_it = effective_t(t_tran, cs)
+            for ev in faults.events_at(it):
+                if ev.kind == "crash":
+                    res = cache.crash(ev.target, graceful=ev.graceful)
+                    flushed = len(res["flushed"])
+                    if flushed:
+                        # the leaver drains its dirty rows to the PS over
+                        # its own link (per-PS: shards in parallel)
+                        elastic_acc["flush_push_ops"] += flushed
+                        if use_ps:
+                            handoff_t += float(
+                                (res["flushed_ps"] * tps_it[ev.target]).max())
+                        else:
+                            handoff_t += flushed * float(t_it[ev.target])
+                    if ev.graceful and len(res["inventory"]):
+                        hp = departure_handoff(cache, ev.target,
+                                               res["inventory"], cs.active,
+                                               row_bytes=cfg.d_tran)
+                    else:
+                        hp = None
+                else:  # rejoin
+                    hp = (rejoin_handoff(cache, ev.target, cs.active,
+                                         row_bytes=cfg.d_tran)
+                          if ev.warm else None)
+                if hp is not None and hp.rows:
+                    hp_t = float(exchange_worker_times(hp.link_bytes(),
+                                                       bw_it).max())
+                    handoff_t += hp_t
+                    elastic_acc["handoff_rows"] += hp.rows
+                    elastic_acc["handoff_time_s"] += hp_t
+
         t0 = time.perf_counter()
         alg1 = None
         if cfg.mechanism == "esd":
@@ -340,24 +417,41 @@ def simulate(cfg: SimConfig) -> SimResult:
                 # (linearized) ids and weight by the owning PS's t
                 ids_, mask, uids, inv = batch_unique_np(samples)
                 latU, dirU = cache.state_columns(uids)
-                C = cost_from_state_cols_ps(inv, mask, latU, dirU, t_ps,
+                C = cost_from_state_cols_ps(inv, mask, latU, dirU, tps_it,
                                             part.shard_of_linear(uids))
             elif cfg.engine == "sparse":
                 # touched-ids Alg. 1: gather state columns for the batch's
                 # unique ids only — no dense snapshot, no O(n*V) work
                 ids_, mask, uids, inv = batch_unique_np(samples)
                 latU, dirU = cache.state_columns(uids)
-                C = cost_from_state_cols(inv, mask, latU, dirU, t_tran)
+                C = cost_from_state_cols(inv, mask, latU, dirU, t_it)
             else:
                 latest, dirty = cache.snapshot()
-                C = cost_matrix_np(samples, latest, dirty, t_tran)
-            assign = hybrid_dispatch(C, esd_cap, cfg.alpha, opt=cfg.opt,
+                C = cost_matrix_np(samples, latest, dirty, t_it)
+            cap_it = esd_cap
+            if faults is not None:
+                # straggler excess compute + finite dead-worker penalty on
+                # the cost columns; capacity raised so the survivors can
+                # absorb every sample (neutral state: bias is exactly 0.0
+                # and cap_it == esd_cap — the bitwise-pinned path)
+                bias = cost_column_bias(tps_it if use_ps else t_it,
+                                        samples.shape[1], cs.active,
+                                        cs.compute_factor, cfg.compute_time_s)
+                C = C + bias[None, :].astype(C.dtype)
+                cap_it = max(esd_cap, -(-k // cs.n_active))
+            assign = hybrid_dispatch(C, cap_it, cfg.alpha, opt=cfg.opt,
                                      variant=cfg.hybrid_variant)
             alg1 = float(C[np.arange(k), assign].sum())
         elif cfg.mechanism == "laia":
-            assign = laia_dispatch(samples, cache.latest_in_cache, m)
+            if faults is None:
+                assign = laia_dispatch(samples, cache.latest_in_cache, m)
+            else:
+                assign = laia_dispatch(samples, cache.latest_in_cache,
+                                       max(m, -(-k // cs.n_active)),
+                                       active=cs.active)
         else:  # het / fae / random all use random dispatch
-            assign = random_dispatch(k, n, rng)
+            assign = (random_dispatch(k, n, rng) if faults is None
+                      else random_dispatch_active(k, cs.active, rng))
         dec_t = time.perf_counter() - t0
         if cfg.decision_model == "calibrated":
             dec_t = (calibrated_decision_time(m, cfg.alpha)
@@ -369,11 +463,11 @@ def simulate(cfg: SimConfig) -> SimResult:
         if use_ps:
             # cost = total traffic over every (worker, PS) link; a worker's
             # wall time is its slowest link (shards transfer in parallel)
-            cost = stats.cost_ps(t_ps)
-            comm = stats.per_worker_time_ps(t_ps)
+            cost = stats.cost_ps(tps_it)
+            comm = stats.per_worker_time_ps(tps_it)
         else:
-            cost = stats.cost(t_tran)
-            comm = stats.per_worker_cost(t_tran)
+            cost = stats.cost(t_it)
+            comm = stats.per_worker_cost(t_it)
 
         # sample-exchange time from the compiled plan's byte accounting:
         # ragged ships the bucketed schedule, padded one uniform block.
@@ -385,7 +479,8 @@ def simulate(cfg: SimConfig) -> SimResult:
         if cfg.exchange is not None:
             t_plan0 = time.perf_counter()
             plan = compile_plan(assign, n, m,
-                                row_bytes=samples.shape[1] * 4, cap=m)
+                                row_bytes=samples.shape[1] * 4, cap=m,
+                                active=None if cs is None else cs.active)
             plan_t = time.perf_counter() - t_plan0
             if cfg.decision_model == "measured":
                 # plan compilation is part of the decision stage (it is
@@ -393,8 +488,13 @@ def simulate(cfg: SimConfig) -> SimResult:
                 dec_t += plan_t
             rows_link = (plan.buckets if cfg.exchange == "ragged"
                          else np.full((n, n), plan.padded_block, np.int64))
+            if cs is not None and not cs.active.all():
+                # no blocks move toward dead destinations (the ragged
+                # buckets are already zero there; the padded baseline
+                # re-bases on the surviving columns)
+                rows_link = rows_link * cs.active[None, :]
             link_bytes = rows_link * plan.row_bytes
-            exch_t = float(exchange_worker_times(link_bytes, bw).max())
+            exch_t = float(exchange_worker_times(link_bytes, bw_it).max())
             if it >= cfg.warmup:
                 exch_acc["payload_bytes"] += plan.stats.payload_bytes
                 exch_acc["wire_bytes"] += int(link_bytes.sum())
@@ -403,7 +503,16 @@ def simulate(cfg: SimConfig) -> SimResult:
         # two pipeline stages: training (compute + PS sync + sample
         # exchange) and the dispatch decision (+ plan) for the next
         # iteration.  Pipelined they overlap (max); synchronous they sum.
-        train_stage = cfg.compute_time_s + comm.max() + exch_t
+        if faults is None:
+            train_stage = cfg.compute_time_s + comm.max() + exch_t
+        else:
+            # per-worker compute priced at the straggler factor; dead
+            # workers contribute nothing; flush/handoff traffic extends
+            # the step it happens in.  Neutral state: factor 1.0 and the
+            # max over (c + comm_j) equal the static formula bitwise.
+            per_w = cfg.compute_time_s * cs.compute_factor + comm
+            train_stage = (float(np.where(cs.active, per_w, 0.0).max())
+                           + exch_t + handoff_t)
         if cfg.pipeline_depth >= 2:
             iter_time = max(train_stage, dec_t)
         else:
@@ -462,4 +571,5 @@ def simulate(cfg: SimConfig) -> SimResult:
         alg1_cost=float(np.sum(alg1_costs)) if alg1_costs else None,
         exchange=exchange,
         pipeline=pipeline,
+        elastic=elastic_acc,
     )

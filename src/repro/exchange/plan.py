@@ -136,7 +136,8 @@ class ExchangePlan:
 
 
 def compile_plan(assign: np.ndarray, n: int, m: int | None = None,
-                 row_bytes: int = 4, cap: int | None = None) -> ExchangePlan:
+                 row_bytes: int = 4, cap: int | None = None,
+                 active: np.ndarray | None = None) -> ExchangePlan:
     """Compile an assignment into an :class:`ExchangePlan`.
 
     Args:
@@ -147,6 +148,13 @@ def compile_plan(assign: np.ndarray, n: int, m: int | None = None,
       row_bytes: wire bytes per sample row (ids: F * 4).
       cap: per-(src, dst) capacity the dispatcher enforced (bounds the
         buckets; default m).
+      active: (n,) bool elastic membership mask.  Routing a sample to an
+        inactive destination is a hard error (the dispatcher's dead-
+        worker penalty should make it impossible); the fixed-shape
+        baseline is re-based on the surviving destinations (a balanced
+        assignment over n_active workers fills ``ceil(m / n_active)``
+        per link, and only active columns carry blocks).  ``None`` or
+        all-active reproduces the static-cluster accounting exactly.
 
     The fixed-shape baseline block (``padded_block``) is what one
     uniform ``lax.all_to_all`` must use: the largest per-link count, but
@@ -172,11 +180,24 @@ def compile_plan(assign: np.ndarray, n: int, m: int | None = None,
     buckets = bucket_sizes(counts, cap=cap)
     schedule = tuple(sorted(np.unique(buckets[buckets > 0]).tolist(),
                             reverse=True))
-    padded_block = int(max(counts.max(initial=0), -(-m // n)))
+    n_dst = n
+    if active is not None:
+        active = np.asarray(active, bool)
+        if active.shape != (n,):
+            raise ValueError(f"active mask shape {active.shape} != ({n},)")
+        dead_rows = counts[:, ~active]
+        if dead_rows.size and dead_rows.any():
+            bad = np.where(~active)[0][dead_rows.any(axis=0)]
+            raise ValueError(
+                f"assignment routes samples to inactive workers {bad.tolist()}")
+        n_dst = int(active.sum())
+        if n_dst == 0:
+            raise ValueError("no active destination workers")
+    padded_block = int(max(counts.max(initial=0), -(-m // n_dst)))
 
     payload = int(counts.sum()) * row_bytes
     ragged = int(buckets.sum()) * row_bytes
-    padded = n * n * padded_block * row_bytes
+    padded = n * n_dst * padded_block * row_bytes
     stats = PlanStats(payload_bytes=payload, ragged_bytes=ragged,
                       padded_bytes=padded,
                       per_link_bytes=buckets * row_bytes)

@@ -89,7 +89,8 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
                          alpha: float, *, part=None, exchange: str = "padded",
                          cap_slack: float = 0.0, sparse_esd: bool = True,
                          capacity: int | None = None,
-                         use_pallas: bool = False):
+                         use_pallas: bool = False, elastic: bool = False,
+                         max_failures: int = 0):
     """Jitted stage functions for the pipelined DLRM ESD step
     (repro.pipeline.runner): the per-step work splits into
 
@@ -110,6 +111,27 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
     ``out_rows = n * exchange_budget(cap, m)`` rows per shard, valid
     rows compacted first and PAD (-1) after — pair with the PAD-masked
     DLRM loss.  Returns ``(decide, advance, realized_cost, out_rows)``.
+
+    ``elastic=True`` (repro.elastic, needs ``exchange="ragged"``) builds
+    churn-tolerant stages whose signatures take three extra *array*
+    arguments — per-step values, never shapes, so membership churn costs
+    zero recompiles after warmup:
+
+      decide(esd_state, sparse, t_arr, col_bias, active)
+      advance(esd_state, sparse, dense, labels, assign, active)
+      realized_cost(esd_state, sparse, assign, t_arr, col_bias, active)
+
+    ``t_arr`` is the step's effective link times (bandwidth droop /
+    PS outage folded in), ``col_bias`` the per-worker cost bias
+    (straggler excess compute; finite dead-worker penalty), ``active``
+    the membership mask (masks dead workers' state rows in decide AND
+    before the cache update, so their stale planes never feed phase A —
+    a rejoin is cold).  The static dispatch capacity is raised to
+    ``ceil(m / (n - max_failures))`` so the survivors of the worst
+    planned simultaneous loss can absorb every sample; a dead worker's
+    exchanged block comes back all-PAD (pair with the PAD-masked loss).
+    With neutral arrays (all active, zero bias, nominal t) the outputs
+    are bitwise-equal to the non-elastic ragged stages.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -127,8 +149,20 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
         raise ValueError("cap_slack > 0 needs exchange='ragged' (the padded "
                          "all_to_all requires equal m/n groups)")
     cap = dispatch_cap(m, n, cap_slack)
-    budget = m // n if cap_slack <= 0.0 else exchange_budget(cap, m)
-    out_rows = m if cap_slack <= 0.0 else n * budget
+    if elastic:
+        if exchange != "ragged":
+            raise ValueError("elastic stages need exchange='ragged' (a dead "
+                             "worker breaks the padded equal-groups "
+                             "all_to_all)")
+        if not 0 <= max_failures < n:
+            raise ValueError(f"max_failures {max_failures} outside [0, {n})")
+        # survivors of the worst planned loss must absorb every sample
+        cap = max(cap, -(-m // (n - max_failures)))
+        budget = m // n if cap == m // n else exchange_budget(cap, m)
+        out_rows = m if cap == m // n else n * budget
+    else:
+        budget = m // n if cap_slack <= 0.0 else exchange_budget(cap, m)
+        out_rows = m if cap_slack <= 0.0 else n * budget
     if exchange == "ragged":
         route = make_esd_exchange(exchange, n, m, use_pallas=use_pallas,
                                   budget=budget, out_rows=out_rows)
@@ -187,7 +221,63 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
             in_specs=(P(axis, None), P(axis)), out_specs=P(),
             check_rep=False)(sparse, assign)
 
-    return decide, advance, realized_cost, out_rows
+    if not elastic:
+        return decide, advance, realized_cost, out_rows
+
+    # -- elastic variants: per-step churn arrays, static shapes ------------
+    from ..elastic import mask_state
+
+    def decide_shard_e(state, s, t_arr, col_bias):
+        if part is not None:
+            s = part.to_linear(s)
+        assign, alg1 = esd_decide(s, state, t_arr, alpha, axis_name=axis,
+                                  use_pallas=use_pallas, part=part,
+                                  cap_slack=cap_slack, with_cost=True,
+                                  col_bias=col_bias, cap=cap)
+        return assign, jax.lax.psum(alg1, axis)
+
+    @jax.jit
+    def decide_e(esd_state, sparse, t_arr, col_bias, active):
+        state = mask_state(esd_state, active)
+        return shard_map(
+            lambda s: decide_shard_e(state, s, t_arr, col_bias), mesh=mesh,
+            in_specs=(P(axis, None),), out_specs=(P(axis), P()),
+            check_rep=False)(sparse)
+
+    @jax.jit
+    def advance_e(esd_state, sparse, dense, labels, assign, active):
+        s2, d2, l2, need = shard_map(
+            advance_shard, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),
+            out_specs=(P(axis, None), P(axis, None), P(axis), P(None, None)),
+            check_rep=False)(sparse, dense, labels, assign)
+        # mask BEFORE the update: a dead worker's stale planes must not
+        # survive into the committed state (its rejoin is cold)
+        state = mask_state(esd_state, active)
+        if sparse_esd:
+            new_state, counts = esd_state_update_sparse(state, need,
+                                                        capacity, part)
+        else:
+            new_state, counts = esd_state_update(state, need, capacity)
+        return (s2, d2, l2), new_state, counts
+
+    def realized_shard_e(state, s, a, t_arr, col_bias):
+        if part is not None:
+            s = part.to_linear(s)
+        C = esd_cost_matrix(s, state, t_arr, use_pallas=use_pallas,
+                            part=part, col_bias=col_bias)
+        alg1 = jnp.take_along_axis(C, a[:, None], axis=1)[:, 0].sum()
+        return jax.lax.psum(alg1, axis)
+
+    @jax.jit
+    def realized_cost_e(esd_state, sparse, assign, t_arr, col_bias, active):
+        state = mask_state(esd_state, active)
+        return shard_map(
+            lambda s, a: realized_shard_e(state, s, a, t_arr, col_bias),
+            mesh=mesh, in_specs=(P(axis, None), P(axis)), out_specs=P(),
+            check_rep=False)(sparse, assign)
+
+    return decide_e, advance_e, realized_cost_e, out_rows
 
 
 # --------------------------------------------------------------------------

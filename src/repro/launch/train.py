@@ -30,6 +30,7 @@ import argparse
 import json
 import time
 from functools import partial
+from itertools import count
 from pathlib import Path
 
 import jax
@@ -44,6 +45,7 @@ from ..core.simulator import DEFAULT_BANDWIDTHS, GBPS, hetero_ps_bandwidths
 from ..data.loader import PrefetchLoader
 from ..data.synthetic import WORKLOADS, token_stream
 from ..dist.sharding import param_specs, to_shardings
+from ..elastic import FaultPlan, cost_column_bias, effective_t
 from ..pipeline import LookaheadWindow, PipelinedRunner
 from .steps import make_dlrm_esd_stages
 from ..models import api, dlrm
@@ -78,6 +80,18 @@ def run_dlrm(args):
         raise SystemExit("--pipeline-depth > 1 / --stale-decide need ESD "
                          "(--esd-alpha): without dispatch there is no "
                          "decision stage to pipeline")
+    plan = None
+    if args.fault_plan:
+        if not use_esd:
+            raise SystemExit("--fault-plan needs ESD (--esd-alpha): faults "
+                             "act through the dispatch stages")
+        if args.exchange != "ragged":
+            raise SystemExit("--fault-plan needs --exchange ragged (a dead "
+                             "worker breaks the padded equal-groups "
+                             "all_to_all)")
+        plan = FaultPlan.parse(args.fault_plan, n, args.n_ps)
+    if args.resume and args.ckpt_dir is None:
+        raise SystemExit("--resume needs --ckpt-dir")
 
     # multi-PS: partition the V-space (repro.ps), run ids/planes/tables in
     # the PS-linearized space, and cost each op at the owning shard's link
@@ -112,10 +126,14 @@ def run_dlrm(args):
     params = jax.device_put(params, shardings)
     batch_shd = lambda nd: NamedSharding(mesh, P(*(("data",) + (None,) * (nd - 1))))
 
-    # PAD-masked loss only when slack can actually produce PAD rows — on
-    # even batches the masked mean equals the plain one, but the plain
-    # path stays the bitwise reference
-    loss_fn = dlrm.bce_loss_masked if args.cap_slack > 0.0 else dlrm.bce_loss
+    # PAD-masked loss only when PAD rows can actually appear: capacity
+    # slack skews batches, and under a fault plan a dead worker's
+    # exchanged block comes back all-PAD.  On even batches the masked
+    # mean equals the plain one, but the plain path stays the bitwise
+    # reference.
+    loss_fn = (dlrm.bce_loss_masked
+               if args.cap_slack > 0.0 or plan is not None
+               else dlrm.bce_loss)
 
     @partial(jax.jit, donate_argnums=(0, 1))
     def train_jit(params, opt_state, sparse, dense, labels):
@@ -126,9 +144,47 @@ def run_dlrm(args):
         params, opt_state = optimizer.update(grads, opt_state, params)
         return params, opt_state, loss
 
+    esd = None
+    if use_esd:
+        # ESD: decide / advance / train stages driven by the pipelined
+        # executor — depth 1 is the synchronous loop (bitwise-identical).
+        # With a fault plan the elastic stage variants take three extra
+        # per-step *array* inputs (link times, cost bias, active mask),
+        # so membership churn never recompiles anything.
+        decide_jit, advance_jit, realized_jit, out_rows = make_dlrm_esd_stages(
+            mesh, n, m, V_space, t_tran, args.esd_alpha or 0.0, part=part,
+            exchange=args.exchange, cap_slack=args.cap_slack,
+            sparse_esd=sparse_esd, capacity=capacity if capacity < V else None,
+            elastic=plan is not None,
+            max_failures=plan.max_inactive() if plan is not None else 0)
+        if sparse_esd:
+            # L = out_rows*F ids per worker post-exchange (need_ids_list
+            # width) — out_rows from the stage factory, so the slot-buffer
+            # sizing can never drift from the advance stage's row count
+            esd = esd_sparse_init(n, V_space, capacity if capacity < V else None,
+                                  max_ids=out_rows * wl.width)
+        else:
+            esd = esd_init(n, V)
+
+    start = 0
+    if args.resume:
+        tmpl = {"params": params, "opt": opt_state}
+        if use_esd:
+            tmpl["esd"] = esd
+        restored, start = restore_checkpoint(args.ckpt_dir, tmpl)
+        params = jax.device_put(restored["params"], shardings)
+        opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+        if use_esd:
+            esd = jax.tree.map(jnp.asarray, restored["esd"])
+        if args.verbose:
+            print(json.dumps({"resumed_from_step": start}), flush=True)
+    if start >= args.steps:
+        return []
+
     metrics = []
     t_total = jnp.asarray(t_tran)
     last_t = time.perf_counter()
+    esd_seen = {}   # step -> post-advance dispatch state, for checkpoints
 
     def record(i, loss, counts, meta, info):
         nonlocal last_t
@@ -136,6 +192,7 @@ def run_dlrm(args):
         rec = {"step": i, "loss": float(loss),
                "wall_s": round(now - last_t, 4)}
         last_t = now
+        esd_snap = esd_seen.pop(i, None)
         if counts is not None:
             base_ops = ("miss_pull", "update_push", "evict_push")
             ops = {op: np.asarray(counts[op]) for op in base_ops}
@@ -153,12 +210,16 @@ def run_dlrm(args):
         for key in ("alg1_est", "alg1_realized"):
             if key in info:
                 rec[key] = float(info[key])
+        if plan is not None:
+            rec["n_active"] = plan.state_at(i).n_active
         metrics.append(rec)
         if args.verbose and (i % args.log_every == 0 or i == args.steps - 1):
             print(json.dumps(rec), flush=True)
         if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, i + 1,
-                            {"params": params, "opt": opt_state})
+            tree = {"params": params, "opt": opt_state}
+            if esd_snap is not None:
+                tree["esd"] = esd_snap
+            save_checkpoint(args.ckpt_dir, i + 1, tree)
         return rec
 
     # host batch source, optionally with the lookahead dedup window
@@ -168,6 +229,10 @@ def run_dlrm(args):
                                    key=lambda b: b[0]))
     else:
         src = ((item, None) for item in stream)
+    # resume: the stream is a pure function of the seed, so skipping the
+    # first `start` batches re-aligns it with the interrupted run
+    for _ in range(start):
+        next(src)
 
     def device_batches():
         for (sparse, dense, labels), meta in src:
@@ -177,7 +242,7 @@ def run_dlrm(args):
 
     if not use_esd:
         dev_batches = device_batches()
-        for i in range(args.steps):
+        for i in range(start, args.steps):
             try:
                 (sparse, dense, labels), meta = next(dev_batches)
             except StopIteration:
@@ -187,46 +252,72 @@ def run_dlrm(args):
             record(i, loss, None, meta, {})
         return metrics
 
-    # ESD: decide / advance / train stages driven by the pipelined
-    # executor — depth 1 is the synchronous loop (bitwise-identical)
-    decide_jit, advance_jit, realized_jit, out_rows = make_dlrm_esd_stages(
-        mesh, n, m, V_space, t_tran, args.esd_alpha or 0.0, part=part,
-        exchange=args.exchange, cap_slack=args.cap_slack,
-        sparse_esd=sparse_esd, capacity=capacity if capacity < V else None)
-    if sparse_esd:
-        # L = out_rows*F ids per worker post-exchange (need_ids_list
-        # width) — out_rows from the stage factory, so the slot-buffer
-        # sizing can never drift from the advance stage's row count
-        esd = esd_sparse_init(n, V_space, capacity if capacity < V else None,
-                              max_ids=out_rows * wl.width)
+    adv_step = count(start)
+    if plan is None:
+        def decide_fn(state, batch):
+            return decide_jit(state, batch[0][0])
+
+        def advance_fn(state, batch, assign):
+            (s, d, l), meta = batch
+            x, new_state, counts = advance_jit(state, s, d, l, assign)
+            esd_seen[next(adv_step)] = new_state
+            return x, new_state, {"counts": counts, "meta": meta}
+
+        realized_fn = None
+        if args.stale_decide:
+            realized_fn = lambda state, batch, assign: realized_jit(
+                state, batch[0][0], assign)
     else:
-        esd = esd_init(n, V)
+        # fold the plan into the per-step stage arrays: effective link
+        # times (bandwidth droop / PS outage), cost-column bias
+        # (stragglers + finite dead-worker penalty), membership mask.
+        # Each stage tracks its own step counter — the pipeline may run
+        # decide/advance ahead of train, but every stage sees steps in
+        # order, offset by the resume start.
+        t_np = np.asarray(t_tran)
 
-    def decide_fn(state, batch):
-        return decide_jit(state, batch[0][0])
+        def fault_arrays(i):
+            cs = plan.state_at(i)
+            t_eff = effective_t(t_np, cs)
+            bias = cost_column_bias(t_eff, wl.width, cs.active,
+                                    cs.compute_factor, args.compute_time_s)
+            return (jnp.asarray(t_eff, t_tran.dtype),
+                    jnp.asarray(bias, jnp.float32),
+                    jnp.asarray(cs.active))
 
-    def advance_fn(state, batch, assign):
-        (s, d, l), meta = batch
-        x, new_state, counts = advance_jit(state, s, d, l, assign)
-        return x, new_state, {"counts": counts, "meta": meta}
+        dec_step, rea_step = count(start), count(start)
+
+        def decide_fn(state, batch):
+            t_arr, bias, act = fault_arrays(next(dec_step))
+            return decide_jit(state, batch[0][0], t_arr, bias, act)
+
+        def advance_fn(state, batch, assign):
+            (s, d, l), meta = batch
+            i = next(adv_step)
+            _, _, act = fault_arrays(i)
+            x, new_state, counts = advance_jit(state, s, d, l, assign, act)
+            esd_seen[i] = new_state
+            return x, new_state, {"counts": counts, "meta": meta}
+
+        realized_fn = None
+        if args.stale_decide:
+            def realized_fn(state, batch, assign):
+                t_arr, bias, act = fault_arrays(next(rea_step))
+                return realized_jit(state, batch[0][0], assign,
+                                    t_arr, bias, act)
 
     def train_fn(x):
         nonlocal params, opt_state
         params, opt_state, loss = train_jit(params, opt_state, *x)
         return loss
 
-    realized_fn = None
-    if args.stale_decide:
-        realized_fn = lambda state, batch, assign: realized_jit(
-            state, batch[0][0], assign)
-
     runner = PipelinedRunner(
         decide_fn, advance_fn, train_fn, esd,
         depth=args.pipeline_depth, stale=args.stale_decide,
         realized_cost_fn=realized_fn)
-    runner.run(device_batches(), steps=args.steps,
+    runner.run(device_batches(), steps=args.steps - start,
                record_fn=lambda t, loss, aux, info: record(
-                   t, loss, aux["counts"], aux["meta"], info))
+                   start + t, loss, aux["counts"], aux["meta"], info))
     return metrics
 
 
@@ -242,11 +333,22 @@ def run_lm(args):
     opt_state = optimizer.init(params)
     # single-host run: model axis is 1 wide, so the specs reduce to pure
     # data parallelism — params/opt state replicated, batch data-sharded.
-    params = jax.device_put(
-        params, to_shardings(param_specs(params, cfg, model_size=1), mesh))
-    opt_state = jax.device_put(
-        opt_state, to_shardings(param_specs(opt_state, cfg, model_size=1), mesh))
+    p_shd = to_shardings(param_specs(params, cfg, model_size=1), mesh)
+    o_shd = to_shardings(param_specs(opt_state, cfg, model_size=1), mesh)
+    params = jax.device_put(params, p_shd)
+    opt_state = jax.device_put(opt_state, o_shd)
     tok_shd = NamedSharding(mesh, P("data", None))
+
+    start = 0
+    if args.resume:
+        if args.ckpt_dir is None:
+            raise SystemExit("--resume needs --ckpt-dir")
+        restored, start = restore_checkpoint(
+            args.ckpt_dir, {"params": params, "opt": opt_state})
+        params = jax.device_put(restored["params"], p_shd)
+        opt_state = jax.device_put(restored["opt"], o_shd)
+        if args.verbose:
+            print(json.dumps({"resumed_from_step": start}), flush=True)
 
     B = max(args.batch_per_worker * n_dev, n_dev)
     S = args.seq_len
@@ -259,8 +361,10 @@ def run_lm(args):
         return params, opt_state, loss
 
     stream = PrefetchLoader(token_stream(args.seed, cfg.vocab, B, S + 1), depth=2)
+    for _ in range(start):
+        next(stream)
     metrics = []
-    for i in range(args.steps):
+    for i in range(start, args.steps):
         tok = next(stream)
         t0 = time.perf_counter()
         params, opt_state, loss = step(
@@ -326,8 +430,19 @@ def build_parser():
     ap.add_argument("--ps-hetero", action="store_true",
                     help="heterogeneous PS links: last PS 0.5 Gbps, rest "
                          "5 Gbps (needs --n-ps > 1)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="repro.elastic fault schedule: compact DSL (e.g. "
+                         "'crash@3:1g; rejoin@6:1w; straggle@2:0x4-10') or "
+                         "@file.json; needs ESD + --exchange ragged")
+    ap.add_argument("--compute-time-s", type=float, default=0.010,
+                    help="nominal per-step compute time; prices straggler "
+                         "slowdown into the dispatch cost bias")
     ap.add_argument("--ckpt-dir", type=Path, default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint in --ckpt-dir "
+                         "(params, optimizer, ESD dispatch state) and "
+                         "continue from its step")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--verbose", action="store_true", default=True)
     return ap

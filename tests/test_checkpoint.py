@@ -1,0 +1,200 @@
+"""repro.checkpoint: crash-safe discovery, corruption fallback, dispatch-
+state round-trips, and driver resume (elastic PR satellites).
+
+The properties pinned here are what `--resume` leans on: a leftover
+``.tmp.npz`` from a killed save is never mistaken for a checkpoint, a
+torn newest archive falls back to the previous one, structural
+mismatches name the offending leaf path, and a resumed driver run
+reproduces the uninterrupted loss curve exactly.
+"""
+import zipfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import DLRM_CONFIGS
+from repro.core.dispatch_tpu import esd_sparse_init
+from repro.data.synthetic import WORKLOADS
+from repro.models import dlrm
+from repro.ps import make_partition
+
+
+def _tree():
+    return {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                       "b": np.linspace(0, 1, 3).astype(np.float64)},
+            "step_count": np.int32(7)}
+
+
+def _leaves_equal(a, b):
+    for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        u, v = np.asarray(u), np.asarray(v)
+        assert u.dtype == v.dtype, (u.dtype, v.dtype)
+        np.testing.assert_array_equal(u, v)
+
+
+class TestDiscovery:
+    def test_round_trip_newest(self, tmp_path):
+        t = _tree()
+        save_checkpoint(tmp_path, 3, t)
+        save_checkpoint(tmp_path, 7, t)
+        assert latest_step(tmp_path) == 7
+        restored, step = restore_checkpoint(tmp_path, t)
+        assert step == 7
+        _leaves_equal(restored, t)
+
+    def test_tmp_leftover_is_not_a_checkpoint(self, tmp_path):
+        save_checkpoint(tmp_path, 2, _tree())
+        # a kill mid-save leaves the staging file, never a final name
+        (tmp_path / "ckpt_00000009.tmp.npz").write_bytes(b"partial")
+        assert latest_step(tmp_path) == 2
+        _, step = restore_checkpoint(tmp_path, _tree())
+        assert step == 2
+
+    def test_next_save_cleans_stale_tmp(self, tmp_path):
+        (tmp_path / "ckpt_00000009.tmp.npz").write_bytes(b"partial")
+        save_checkpoint(tmp_path, 4, _tree())
+        assert list(tmp_path.glob("*.tmp.npz")) == []
+        assert latest_step(tmp_path) == 4
+
+    def test_stray_names_ignored(self, tmp_path):
+        save_checkpoint(tmp_path, 5, _tree())
+        (tmp_path / "ckpt_latest.npz").write_bytes(b"not a checkpoint")
+        assert latest_step(tmp_path) == 5
+
+    def test_empty_dir(self, tmp_path):
+        assert latest_step(tmp_path) is None
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(tmp_path, _tree())
+
+
+class TestCorruptionFallback:
+    def _truncate(self, path):
+        path.write_bytes(path.read_bytes()[:40])   # torn write, keeps PK magic
+
+    def test_truncated_newest_falls_back(self, tmp_path):
+        t = _tree()
+        save_checkpoint(tmp_path, 4, t)
+        self._truncate(save_checkpoint(tmp_path, 6, t))
+        with pytest.warns(RuntimeWarning, match="unreadable"):
+            restored, step = restore_checkpoint(tmp_path, t)
+        assert step == 4
+        _leaves_equal(restored, t)
+
+    def test_explicit_step_never_falls_back(self, tmp_path):
+        t = _tree()
+        save_checkpoint(tmp_path, 4, t)
+        self._truncate(save_checkpoint(tmp_path, 6, t))
+        with pytest.raises(zipfile.BadZipFile):
+            restore_checkpoint(tmp_path, t, step=6)
+
+    def test_all_unreadable_raises(self, tmp_path):
+        t = _tree()
+        self._truncate(save_checkpoint(tmp_path, 1, t))
+        with pytest.warns(RuntimeWarning):
+            with pytest.raises(FileNotFoundError):
+                restore_checkpoint(tmp_path, t)
+
+
+class TestStructuralErrors:
+    def test_shape_mismatch_names_leaf(self, tmp_path):
+        save_checkpoint(tmp_path, 2, _tree())
+        bad = _tree()
+        bad["params"]["w"] = np.zeros((3, 3), np.float32)
+        with pytest.raises(ValueError, match=r"params::w"):
+            restore_checkpoint(tmp_path, bad)
+
+    def test_missing_leaf_names_path(self, tmp_path):
+        save_checkpoint(tmp_path, 2, _tree())
+        wider = _tree()
+        wider["extra_head"] = np.zeros(2, np.float32)
+        with pytest.raises(KeyError, match="extra_head"):
+            restore_checkpoint(tmp_path, wider)
+
+    def test_structural_error_beats_fallback(self, tmp_path):
+        # a caller-bug mismatch must not be papered over by an older file
+        t = _tree()
+        save_checkpoint(tmp_path, 1, t)
+        save_checkpoint(tmp_path, 2, t)
+        bad = _tree()
+        bad["params"]["w"] = np.zeros((5, 5), np.float32)
+        with pytest.raises(ValueError, match=r"params::w"):
+            restore_checkpoint(tmp_path, bad)
+
+
+class TestDispatchStateRoundTrip:
+    def _filled(self, tree, seed=0):
+        """Same structure, deterministic non-trivial values per leaf."""
+        rng = np.random.default_rng(seed)
+
+        def fill(x):
+            x = np.asarray(x)
+            if x.dtype == bool:
+                return rng.random(x.shape) < 0.5
+            return (rng.integers(0, 7, x.shape)).astype(x.dtype)
+
+        return jax.tree.map(fill, tree)
+
+    def test_sparse_esd_state_dtype_preserving(self, tmp_path):
+        # SparseEsdState is a registered dataclass: its leaves flatten
+        # with GetAttrKey paths and must survive with exact dtypes
+        # (bool planes, int32 slot buffers)
+        esd = self._filled(esd_sparse_init(4, 256, 32, max_ids=64))
+        save_checkpoint(tmp_path, 1, {"esd": esd})
+        restored, _ = restore_checkpoint(tmp_path, {"esd": esd})
+        _leaves_equal(restored["esd"], esd)
+        assert type(restored["esd"]) is type(esd)
+
+    def test_multi_ps_stacked_tables(self, tmp_path):
+        cfg = DLRM_CONFIGS["wdl-tiny"]
+        wl = WORKLOADS[cfg.workload]
+        part = make_partition(wl.vocab, 2, "contiguous")
+        params = dlrm.ps_stack_tables(
+            dlrm.init_params(jax.random.key(0), cfg, wl), part)
+        save_checkpoint(tmp_path, 3, {"params": params})
+        restored, step = restore_checkpoint(tmp_path, {"params": params})
+        assert step == 3
+        _leaves_equal(restored["params"], params)
+
+
+class TestDriverResume:
+    """--resume continues the uninterrupted run's loss curve exactly
+    (same stream seed + restored params/opt/dispatch state)."""
+
+    def test_esd_resume_matches_uninterrupted(self, tmp_path):
+        from repro.launch.train import main
+
+        common = ["--arch", "wdl-tiny", "--steps", "6",
+                  "--batch-per-worker", "8", "--esd-alpha", "0",
+                  "--exchange", "ragged", "--log-every", "100"]
+        ck = ["--ckpt-dir", str(tmp_path), "--ckpt-every", "2"]
+        full = main(common)
+        main(["--arch", "wdl-tiny", "--steps", "4", "--batch-per-worker",
+              "8", "--esd-alpha", "0", "--exchange", "ragged",
+              "--log-every", "100"] + ck)
+        res = main(common + ck + ["--resume"])
+        assert [r["step"] for r in res] == [4, 5]
+        assert [r["loss"] for r in res] == [r["loss"] for r in full[4:]]
+        # the dispatch/cache trajectory is restored too, not just params
+        assert [r["miss_pull"] for r in res] == \
+            [r["miss_pull"] for r in full[4:]]
+        assert [r["update_push"] for r in res] == \
+            [r["update_push"] for r in full[4:]]
+
+    def test_plain_dlrm_resume_matches(self, tmp_path):
+        from repro.launch.train import main
+
+        base = ["--arch", "wdl-tiny", "--batch-per-worker", "8",
+                "--log-every", "100"]
+        ck = ["--ckpt-dir", str(tmp_path), "--ckpt-every", "2"]
+        full = main(base + ["--steps", "4"])
+        main(base + ["--steps", "2"] + ck)
+        res = main(base + ["--steps", "4"] + ck + ["--resume"])
+        assert [r["loss"] for r in res] == [r["loss"] for r in full[2:]]
+
+    def test_resume_needs_ckpt_dir(self):
+        from repro.launch.train import main
+
+        with pytest.raises(SystemExit):
+            main(["--arch", "wdl-tiny", "--steps", "1", "--resume"])
