@@ -283,7 +283,7 @@ def bench_exchange(a: float, n: int, iters: int, m: int = 64,
 
     @jax.jit
     def pack_compact(rows, assign):
-        send, counts = pack_send(rows, assign, n, budget)
+        send, counts, _ = pack_send(rows, assign, n, budget)
         return compact_recv(send, counts, m)[0]
 
     pack_ms = _time(lambda: pack_compact(rows, assign).block_until_ready(), 5)
@@ -293,10 +293,75 @@ def bench_exchange(a: float, n: int, iters: int, m: int = 64,
     return {
         "zipf_a": a, "n": n, "m": m, "cap_slack": cap_slack,
         **{k: v for k, v in res.items()},
-        "pad_reduction": (1.0 - pad_r / pad_p) if pad_p else 0.0,
+        "pad_reduction": ((1.0 - pad_r / pad_p) if pad_p
+                          else (1.0 if pad_r == 0 else 0.0)),
         "alg1_drop": 1.0 - res["ragged_slack"]["alg1_cost"]
         / res["ragged"]["alg1_cost"],
         "pack_ms": pack_ms,
+    }
+
+
+def bench_codec(a: float, n: int, iters: int, m: int = 64,
+                emb_dim: int = 64) -> dict:
+    """Quantized-exchange sweep at Zipf ``a``: fp32 vs int8-uniform vs a
+    bandwidth-split codec mix on a heterogeneous preset (half the
+    workers on fast links, half on slow edge links).
+
+    Reports the simulator's wire-byte census per codec and — the point
+    of codec-aware pricing — how the Alg.-1 dispatch itself shifts when
+    per-link byte widths enter the transmission-time term: slow links
+    get cheaper under int4, so decisions move toward them."""
+    from repro.core import SimConfig, cost_matrix_np, hybrid_dispatch, simulate
+    from repro.core.cost import transmission_time_codec
+    from repro.exchange import compile_plan
+    from repro.quant.codecs import resolve_link_codecs
+
+    wl = _exchange_workload(a)
+    bw = np.where(np.arange(n) % 2 == 0, 1.25e8, 1e6)
+    base = dict(workload=wl, n_workers=n, batch_per_worker=m,
+                cache_ratio=0.05, embedding_dim=emb_dim, iters=iters,
+                warmup=max(2, iters // 4), mechanism="esd", alpha=0.0,
+                bandwidths=bw)
+    sims = {}
+    for key, kw in [("fp32", {}),
+                    ("int8", dict(codec="int8")),
+                    ("mixed", dict(codec="int4",
+                                   codec_policy="bandwidth"))]:
+        r = simulate(SimConfig(**kw, **base))
+        sims[key] = {"alg1_cost": r.alg1_cost, "itps": r.itps,
+                     "quant": r.quant}
+
+    # decision shift on a warmed synthetic state: the SAME cache/dirty
+    # planes priced at fp32 vs per-link codec byte widths
+    rng = np.random.default_rng(0)
+    V = wl.vocab
+    latest = rng.random((n, V)) < 0.3
+    dirty = rng.random((n, V)) < 0.1
+    samples = rng.integers(0, V, (m, wl.width))
+    t32 = (emb_dim * 4.0) / bw
+    links = resolve_link_codecs("bandwidth", bw, "int4")
+    tq = transmission_time_codec(emb_dim, bw, links)
+    C32 = cost_matrix_np(samples, latest, dirty, t32)
+    Cq = cost_matrix_np(samples, latest, dirty, tq)
+    cap = max(m // n, 1)
+    a32 = np.asarray(hybrid_dispatch(C32, cap, alpha=1.0))
+    aq = np.asarray(hybrid_dispatch(Cq, cap, alpha=1.0))
+    rows = np.arange(m)
+    alg1_fp32_decisions = float(Cq[rows, a32].sum())
+    alg1_codec_decisions = float(Cq[rows, aq].sum())
+
+    # treat the warmed batch as a source-major global assignment
+    # (m/n rows per source) for the codec-tagged plan accounting
+    plan = compile_plan(np.asarray(aq), n, codec="int8",
+                        row_elems=emb_dim)
+    return {
+        "zipf_a": a, "n": n, "m": m, "emb_dim": emb_dim,
+        **{k: v for k, v in sims.items()},
+        "byte_reduction_int8": sims["int8"]["quant"]["byte_reduction"],
+        "shift_frac": float((a32 != aq).mean()),
+        "alg1_fp32_decisions_at_codec_prices": alg1_fp32_decisions,
+        "alg1_codec_decisions_at_codec_prices": alg1_codec_decisions,
+        "plan_int8": plan.stats.summary(),
     }
 
 
@@ -321,6 +386,19 @@ def run_exchange(quick: bool = False, out: Path | None = None) -> dict:
                   f"alg1_drop={r['alg1_drop']:.2f},"
                   f"wire_MB={r['ragged']['wire_bytes'] / 1e6:.2f}/"
                   f"{r['padded']['wire_bytes'] / 1e6:.2f}")
+    report["codec"] = []
+    for a in zipfs:
+        c = bench_codec(a, ns[0], iters)
+        report["codec"].append(c)
+        assert c["byte_reduction_int8"] >= 4.0, c
+        assert (c["alg1_codec_decisions_at_codec_prices"]
+                <= c["alg1_fp32_decisions_at_codec_prices"]), c
+        print(f"codec.a{a}.n{ns[0]},int8_red={c['byte_reduction_int8']:.1f}x,"
+              f"shift={c['shift_frac']:.2f},"
+              f"alg1={c['alg1_codec_decisions_at_codec_prices']:.4f}/"
+              f"{c['alg1_fp32_decisions_at_codec_prices']:.4f},"
+              f"mixed_alg1={c['mixed']['alg1_cost']:.4f}"
+              f"<fp32={c['fp32']['alg1_cost']:.4f}")
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(report, indent=2))
     return report

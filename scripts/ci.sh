@@ -51,7 +51,10 @@ python examples/quickstart.py > /dev/null
 python -m benchmarks.dispatch_bench --exchange --quick
 python -m benchmarks.pipeline_bench --quick
 python -m benchmarks.elastic_bench --quick
-echo "pre-test gate (compileall + quickstart + exchange/pipeline/elastic smoke): $((SECONDS - t0))s"
+# quantized-exchange smoke: fp32 vs int8 driver runs must both learn and
+# the int8 census must show >= 4x fewer wire bytes
+python -m benchmarks.quant_bench --quick
+echo "pre-test gate (compileall + quickstart + exchange/pipeline/elastic/quant smoke): $((SECONDS - t0))s"
 
 t0=$SECONDS
 env "${TEST_ENV[@]}" python -m pytest -q --durations=10

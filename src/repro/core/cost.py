@@ -45,7 +45,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "transmission_time", "cost_matrix_np", "per_id_cost_rows",
+    "transmission_time", "transmission_time_codec", "cost_matrix_np",
+    "per_id_cost_rows",
     "cost_matrix_jnp", "dedup_mask_np", "dedup_mask_jnp", "batch_unique_np",
     "cost_from_state_cols", "cost_matrix_sparse", "cost_matrix_sparse_jnp",
     "per_id_cost_rows_ps", "cost_from_state_cols_ps", "cost_matrix_sparse_ps",
@@ -58,6 +59,39 @@ PAD_ID = -1  # padding slot inside a sample's id list
 def transmission_time(d_tran_bytes: float, bandwidth_bytes_per_s: np.ndarray) -> np.ndarray:
     """T_j = D_tran / B_j (paper Table 1)."""
     return np.asarray(d_tran_bytes, np.float64) / np.asarray(bandwidth_bytes_per_s, np.float64)
+
+
+def transmission_time_codec(n_elems: int, bandwidth_bytes_per_s: np.ndarray,
+                            link_codecs=None) -> np.ndarray:
+    """Per-link row transmission time for an ``n_elems``-wide embedding
+    row under per-link wire codecs — Alg. 1's T_j with the byte width
+    folded in, so dispatch decisions *change* when links carry quantized
+    payloads (a slow edge link running int4 can beat a fast fp32 one).
+
+    ``link_codecs`` is what :func:`repro.quant.codecs.
+    resolve_link_codecs` returns: ``None`` (every link fp32 — bitwise
+    identical to ``transmission_time(n_elems * 4.0, bw)``) or an array
+    of codec names shaped like ``bandwidth_bytes_per_s`` ((n,) or
+    (n, n_ps)).  A quantized link is charged payload + scale/zero-point
+    metadata (:func:`repro.quant.codecs.row_wire_bytes`).
+    """
+    bw = np.asarray(bandwidth_bytes_per_s, np.float64)
+    if link_codecs is None:
+        return transmission_time(n_elems * 4.0, bw)
+    from ..quant.codecs import row_wire_bytes
+
+    codecs = np.asarray(link_codecs, object)
+    if codecs.shape != bw.shape:
+        raise ValueError(f"link_codecs shape {codecs.shape} != "
+                         f"bandwidth shape {bw.shape}")
+    byte_of = {}
+    flat = codecs.reshape(-1)
+    d = np.empty(flat.shape, np.float64)
+    for i, name in enumerate(flat):
+        if name not in byte_of:
+            byte_of[name] = float(row_wire_bytes(n_elems, name))
+        d[i] = byte_of[name]
+    return d.reshape(bw.shape) / bw
 
 
 # --------------------------------------------------------------------------

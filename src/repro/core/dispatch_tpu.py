@@ -166,9 +166,25 @@ def hybrid_dispatch_jax(C, m: int, alpha: float, cap: Optional[int] = None):
     opt_idx, heu_idx = order[:opt_rows], order[opt_rows:]
     assign = jnp.full((k,), -1, jnp.int32)
     a_opt = auction_fixed(C[opt_idx], opt_cap)
-    # stragglers (shouldn't happen with enough rounds): send to min-loaded
-    counts = jnp.zeros((n,), jnp.int32).at[a_opt].add(1, mode="drop")
-    a_opt = jnp.where(a_opt < 0, jnp.argmin(counts).astype(a_opt.dtype), a_opt)
+    # stragglers (tie wars the terminal repair phases didn't settle):
+    # place each on its cheapest worker WITH SPARE CAPACITY — dumping
+    # them all on one argmin-loaded worker can exceed ``cap``, and the
+    # ragged wire drops every over-budget row (launch.steps raises on
+    # the overflow counter).  opt_rows <= opt_cap * n guarantees a free
+    # slot exists for every straggler.
+    placed = a_opt >= 0
+    wl0 = jnp.zeros((n,), jnp.int32).at[
+        jnp.where(placed, a_opt, 0)].add(placed.astype(jnp.int32))
+    pref_opt = jnp.argsort(C[opt_idx], axis=1, stable=True)
+
+    def _place(wl, i):
+        row = pref_opt[i]
+        j_new = row[jnp.argmax(wl[row] < opt_cap)]
+        j = jnp.where(placed[i], a_opt[i], j_new)
+        return wl.at[j_new].add(jnp.int32(~placed[i])), j
+
+    _, a_opt = jax.lax.scan(_place, wl0,
+                            jnp.arange(opt_rows, dtype=jnp.int32))
     assign = assign.at[opt_idx].set(a_opt)
     if opt_rows < k:
         workload = jnp.zeros((n,), jnp.int32).at[a_opt].add(1)
@@ -681,9 +697,9 @@ def esd_dispatch(samples, state, t_tran, alpha: float,
         from ..exchange.ragged import ragged_exchange
         budget = cap if cap_slack <= 0.0 else exchange_budget(cap, m)
         out_rows = m if cap_slack <= 0.0 else n * budget
-        out, _, _ = ragged_exchange(samples, assign, axis_name, budget,
-                                    out_rows=out_rows,
-                                    use_pallas=use_pallas)
+        out, _, _, _ = ragged_exchange(samples, assign, axis_name, budget,
+                                       out_rows=out_rows,
+                                       use_pallas=use_pallas)
         return out, assign
     order = jnp.argsort(assign, stable=True)             # groups of m/n
     routed = samples[order].reshape(n, m // n, F)

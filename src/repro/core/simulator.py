@@ -76,7 +76,7 @@ from .baselines import (FAECache, HETCache, laia_dispatch, random_dispatch,
 from .cache import ClusterCache, IterStats, SparseClusterCache
 from .cost import (batch_unique_np, cost_from_state_cols,
                    cost_from_state_cols_ps, cost_matrix_np,
-                   transmission_time)
+                   transmission_time, transmission_time_codec)
 from .hybrid import hybrid_dispatch
 
 __all__ = ["SimConfig", "SimResult", "simulate", "DEFAULT_BANDWIDTHS",
@@ -164,6 +164,15 @@ class SimConfig:
     # runs the elastic code path with neutral values and is bitwise-equal
     # to None (pinned in tests).
     faults: "object | None" = None
+    # quantized wire (repro.quant): codec for the embedding-row
+    # transmissions (PS miss pulls / update+evict pushes) — folds the
+    # per-link byte width into Alg.-1's T_j, so dispatch decisions shift
+    # toward links whose codec makes them cheap.  codec_policy
+    # "bandwidth" splits at the median link speed (fast links fp16,
+    # slow ones the codec / int4).  codec=None with policy "uniform"
+    # (the defaults) is the bitwise fp32 path.
+    codec: str | None = None
+    codec_policy: Literal["uniform", "bandwidth"] = "uniform"
 
     @property
     def d_tran(self) -> float:
@@ -210,6 +219,9 @@ class SimResult:
     # fault/churn accounting (SimConfig.faults set): events applied, flush
     # pushes, handoff rows/time, worst-case surviving worker count
     elastic: dict | None = None
+    # quantized-wire accounting (SimConfig.codec / codec_policy set):
+    # per-link codec census + embedding fp32-vs-wire byte totals
+    quant: dict | None = None
 
     def summary(self) -> dict:
         out = {
@@ -224,6 +236,8 @@ class SimResult:
             out["exchange"] = self.exchange
         if self.elastic is not None:
             out["elastic"] = self.elastic
+        if self.quant is not None:
+            out["quant"] = self.quant
         if self.pipeline is not None and (
                 self.pipeline["depth"] == 1 or self.pipeline["lookahead"]):
             out["pipeline"] = self.pipeline
@@ -266,6 +280,15 @@ def simulate(cfg: SimConfig) -> SimResult:
     n, m, k = cfg.n_workers, cfg.batch_per_worker, cfg.k
     bw = cfg.bandwidths if cfg.bandwidths is not None else DEFAULT_BANDWIDTHS(n)
     t_tran = transmission_time(cfg.d_tran, bw)
+    link_codecs = None
+    if cfg.codec is not None or cfg.codec_policy != "uniform":
+        from ..quant.codecs import resolve_link_codecs
+        link_codecs = resolve_link_codecs(cfg.codec_policy, bw, cfg.codec)
+        if link_codecs is not None:
+            # quantized links re-price T_j (payload + scale/zp metadata)
+            # — this is where dispatch decisions change
+            t_tran = transmission_time_codec(cfg.embedding_dim, bw,
+                                             link_codecs)
     rng = np.random.default_rng(cfg.seed)
     if cfg.cap_slack > 0.0 and cfg.exchange != "ragged":
         raise ValueError("cap_slack > 0 needs exchange='ragged' (the padded "
@@ -288,6 +311,13 @@ def simulate(cfg: SimConfig) -> SimResult:
             raise ValueError(f"ps_bandwidths shape {bw_ps.shape} != "
                              f"({n}, {part.n_ps})")
         t_ps = transmission_time(cfg.d_tran, bw_ps)        # (n, n_ps)
+        if link_codecs is not None:
+            from ..quant.codecs import resolve_link_codecs
+            # per-(worker, PS) codecs follow the per-shard link speeds
+            link_codecs = resolve_link_codecs(cfg.codec_policy, bw_ps,
+                                              cfg.codec)
+            t_ps = transmission_time_codec(cfg.embedding_dim, bw_ps,
+                                           link_codecs)
         vocab = part.linear_size
 
     # offline popularity profile (for FAE's static hot set) — only FAE
@@ -338,6 +368,17 @@ def simulate(cfg: SimConfig) -> SimResult:
     exch_acc = ({"mode": cfg.exchange, "payload_bytes": 0, "wire_bytes": 0,
                  "padded_wire_bytes": 0, "times": []}
                 if cfg.exchange is not None else None)
+    quant_acc = None
+    if link_codecs is not None:
+        from ..quant.codecs import meta_row_bytes, wire_row_bytes
+        E = cfg.embedding_dim
+        # precompute per-link byte widths once; every embedding op on a
+        # link moves one E-row at its codec's width
+        _wire_b = np.vectorize(
+            lambda c: wire_row_bytes(E, c), otypes=[np.int64])(link_codecs)
+        _meta_b = np.vectorize(
+            lambda c: meta_row_bytes(E, c), otypes=[np.int64])(link_codecs)
+        quant_acc = {"ops": np.zeros(link_codecs.shape, np.int64)}
     hits = lookups = 0
     ingredient = {
         "5Gbps": {"miss_pull": 0, "update_push": 0, "evict_push": 0},
@@ -531,6 +572,16 @@ def simulate(cfg: SimConfig) -> SimResult:
                 ingredient[cls]["miss_pull"] += int(stats.miss_pull[mask].sum())
                 ingredient[cls]["update_push"] += int(stats.update_push[mask].sum())
                 ingredient[cls]["evict_push"] += int(stats.evict_push[mask].sum())
+            if quant_acc is not None:
+                if link_codecs.ndim == 2:
+                    ops = (np.asarray(stats.miss_pull_ps)
+                           + np.asarray(stats.update_push_ps)
+                           + np.asarray(stats.evict_push_ps))
+                else:
+                    ops = (np.asarray(stats.miss_pull)
+                           + np.asarray(stats.update_push)
+                           + np.asarray(stats.evict_push))
+                quant_acc["ops"] += ops.astype(np.int64)
 
     per_iter_cost = np.asarray(per_iter_cost)
     per_iter_time = np.asarray(per_iter_time)
@@ -544,9 +595,27 @@ def simulate(cfg: SimConfig) -> SimResult:
             "wire_bytes": exch_acc["wire_bytes"],
             "padded_wire_bytes": exch_acc["padded_wire_bytes"],
             "pad_bytes": pad,
-            "pad_reduction": (1.0 - pad / pad_base) if pad_base else 0.0,
+            "pad_reduction": ((1.0 - pad / pad_base) if pad_base
+                              else (1.0 if pad == 0 else 0.0)),
             "time_mean_s": float(np.mean(exch_acc["times"]))
             if exch_acc["times"] else 0.0,
+        }
+    quant = None
+    if quant_acc is not None:
+        from ..quant.codecs import codec_name
+        ops = quant_acc["ops"]
+        fp32_b = int(ops.sum()) * int(cfg.d_tran)
+        wire_b = int((ops * _wire_b).sum())
+        meta_b = int((ops * _meta_b).sum())
+        names, cnts = np.unique(link_codecs.astype(str), return_counts=True)
+        quant = {
+            "codec": codec_name(cfg.codec),
+            "policy": cfg.codec_policy,
+            "link_codecs": {str(nm): int(c) for nm, c in zip(names, cnts)},
+            "emb_fp32_bytes": fp32_b,
+            "emb_wire_bytes": wire_b,
+            "emb_meta_bytes": meta_b,
+            "byte_reduction": (fp32_b / wire_b) if wire_b else None,
         }
     pipeline = {
         "depth": cfg.pipeline_depth,
@@ -572,4 +641,5 @@ def simulate(cfg: SimConfig) -> SimResult:
         exchange=exchange,
         pipeline=pipeline,
         elastic=elastic_acc,
+        quant=quant,
     )

@@ -7,8 +7,9 @@
 """
 from .plan import (ExchangePlan, PlanStats, bucket_sizes, compile_plan,
                    gather_reference)
-from .ragged import compact_recv, pack_send, ragged_exchange
+from .ragged import (compact_recv, pack_send, ragged_exchange,
+                     ragged_exchange_quant)
 
 __all__ = ["ExchangePlan", "PlanStats", "bucket_sizes", "compile_plan",
            "gather_reference", "compact_recv", "pack_send",
-           "ragged_exchange"]
+           "ragged_exchange", "ragged_exchange_quant"]

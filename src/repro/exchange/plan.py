@@ -65,7 +65,13 @@ def bucket_sizes(counts: np.ndarray, cap: int | None = None) -> np.ndarray:
     if cap is not None:
         if counts.size and counts.max() > cap:
             raise ValueError(f"count {counts.max()} exceeds cap {cap}")
-        out = np.minimum(out, cap)
+        # clamp to the largest pow2 <= cap, with cap itself as the single
+        # terminal bucket: every schedule entry is a power of two or cap,
+        # so a non-pow2 cap contributes exactly ONE extra distinct block
+        # shape instead of leaking one per clamped count, and
+        # len(schedule) <= floor(log2(cap)) + 2 always holds
+        top = 1 << int(np.floor(np.log2(cap)))
+        out = np.where(out > top, cap, out)
     return out
 
 
@@ -77,6 +83,14 @@ class PlanStats:
     ragged_bytes: int         # bucketed-schedule wire bytes
     padded_bytes: int         # fixed-shape baseline wire bytes
     per_link_bytes: np.ndarray  # (n, n) ragged wire bytes per (src, dst)
+    # codec tagging (repro.quant): when the payload ships quantized,
+    # payload/ragged/padded count *code* bytes at the codec's width and
+    # the scale/zero-point side channel is reported separately (mirroring
+    # how the plan's counts/offsets side channel is never charged as
+    # wire bytes).  codec None keeps the plain fp32-width accounting.
+    codec: str | None = None
+    meta_bytes: int = 0              # scale/zp bytes on the ragged wire
+    payload_fp32_bytes: int | None = None  # same payload at 4 bytes/elem
 
     @property
     def pad_bytes_ragged(self) -> int:
@@ -89,14 +103,26 @@ class PlanStats:
     @property
     def pad_reduction(self) -> float:
         """Fraction of the baseline's pad bytes the ragged plan avoids
-        (1.0 = no pad shipped at all; 0.0 = no better than padded)."""
+        (1.0 = no pad shipped at all; 0.0 = no better than padded).
+
+        A perfectly balanced assignment ships zero pad on BOTH plans —
+        that is the best case, not the worst, so both-zero reports 1.0
+        (it used to report 0.0, tarring Zipf a=0 sweeps as worst-case).
+        """
         base = self.pad_bytes_padded
         if base == 0:
-            return 0.0
+            return 1.0 if self.pad_bytes_ragged == 0 else 0.0
         return 1.0 - self.pad_bytes_ragged / base
 
+    @property
+    def byte_reduction(self) -> float | None:
+        """fp32 payload bytes / codec payload bytes (None without codec)."""
+        if self.payload_fp32_bytes is None or self.payload_bytes == 0:
+            return None
+        return self.payload_fp32_bytes / self.payload_bytes
+
     def summary(self) -> dict:
-        return {
+        out = {
             "payload_bytes": int(self.payload_bytes),
             "ragged_bytes": int(self.ragged_bytes),
             "padded_bytes": int(self.padded_bytes),
@@ -104,6 +130,12 @@ class PlanStats:
             "pad_bytes_padded": int(self.pad_bytes_padded),
             "pad_reduction": float(self.pad_reduction),
         }
+        if self.codec is not None:
+            out["codec"] = self.codec
+            out["meta_bytes"] = int(self.meta_bytes)
+            out["payload_fp32_bytes"] = int(self.payload_fp32_bytes)
+            out["byte_reduction"] = float(self.byte_reduction or 0.0)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,7 +169,8 @@ class ExchangePlan:
 
 def compile_plan(assign: np.ndarray, n: int, m: int | None = None,
                  row_bytes: int = 4, cap: int | None = None,
-                 active: np.ndarray | None = None) -> ExchangePlan:
+                 active: np.ndarray | None = None,
+                 codec=None, row_elems: int | None = None) -> ExchangePlan:
     """Compile an assignment into an :class:`ExchangePlan`.
 
     Args:
@@ -155,11 +188,26 @@ def compile_plan(assign: np.ndarray, n: int, m: int | None = None,
         assignment over n_active workers fills ``ceil(m / n_active)``
         per link, and only active columns carry blocks).  ``None`` or
         all-active reproduces the static-cluster accounting exactly.
+      codec: optional wire codec (name / :class:`repro.quant.Codec`).
+        When set, ``row_elems`` must give the float elements per row;
+        ``row_bytes`` is derived as the codec's payload code bytes and
+        the scale/zero-point side channel lands in ``stats.meta_bytes``
+        (never charged as pad-reduction wire bytes, mirroring the
+        counts/offsets side channel).
+      row_elems: float elements per row (required with ``codec``).
 
     The fixed-shape baseline block (``padded_block``) is what one
     uniform ``lax.all_to_all`` must use: the largest per-link count, but
     never below ``ceil(m / n)`` (a balanced assignment fills m/n).
     """
+    if codec is not None:
+        from ..quant.codecs import get_codec, meta_row_bytes, wire_row_bytes
+        codec = get_codec(codec)
+    if codec is not None:
+        if row_elems is None:
+            raise ValueError("codec-tagged plans need row_elems")
+        row_bytes = wire_row_bytes(row_elems, codec)
+
     assign = np.asarray(assign)
     k = assign.shape[0]
     if m is None:
@@ -181,6 +229,7 @@ def compile_plan(assign: np.ndarray, n: int, m: int | None = None,
     schedule = tuple(sorted(np.unique(buckets[buckets > 0]).tolist(),
                             reverse=True))
     n_dst = n
+    n_src = n
     if active is not None:
         active = np.asarray(active, bool)
         if active.shape != (n,):
@@ -193,14 +242,26 @@ def compile_plan(assign: np.ndarray, n: int, m: int | None = None,
         n_dst = int(active.sum())
         if n_dst == 0:
             raise ValueError("no active destination workers")
+        # dead sources hold no samples, so the fixed-shape baseline only
+        # ships active-source rows — counting all n sources inflated
+        # padded_bytes and flattered pad_reduction under churn
+        n_src = n_dst
+
     padded_block = int(max(counts.max(initial=0), -(-m // n_dst)))
 
     payload = int(counts.sum()) * row_bytes
     ragged = int(buckets.sum()) * row_bytes
-    padded = n * n_dst * padded_block * row_bytes
-    stats = PlanStats(payload_bytes=payload, ragged_bytes=ragged,
-                      padded_bytes=padded,
-                      per_link_bytes=buckets * row_bytes)
+    padded = n_src * n_dst * padded_block * row_bytes
+    if codec is None:
+        stats = PlanStats(payload_bytes=payload, ragged_bytes=ragged,
+                          padded_bytes=padded,
+                          per_link_bytes=buckets * row_bytes)
+    else:
+        stats = PlanStats(
+            payload_bytes=payload, ragged_bytes=ragged, padded_bytes=padded,
+            per_link_bytes=buckets * row_bytes, codec=codec.name,
+            meta_bytes=int(buckets.sum()) * meta_row_bytes(row_elems, codec),
+            payload_fp32_bytes=int(counts.sum()) * 4 * row_elems)
     return ExchangePlan(n=n, m=m, row_bytes=row_bytes, counts=counts,
                         offsets=offsets, buckets=buckets, schedule=schedule,
                         padded_block=padded_block, stats=stats)

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["pack_send", "compact_recv", "ragged_exchange"]
+__all__ = ["pack_send", "compact_recv", "ragged_exchange",
+           "ragged_exchange_quant"]
 
 
 def pack_send(rows, assign, n: int, budget: int, fill: int = -1,
@@ -37,10 +38,14 @@ def pack_send(rows, assign, n: int, budget: int, fill: int = -1,
     """Pack local rows into per-destination send blocks.
 
     rows: (m, ...) payload; assign: (m,) destination in [0, n).
-    Returns (send (n, budget, ...), counts (n,) int32).  Rows keep their
-    original order within each destination block (stable); rows beyond
-    ``budget`` for a destination are dropped (the dispatch capacity must
-    prevent that — callers size budget >= cap).
+    Returns (send (n, budget, ...), counts (n,) int32, overflow ()
+    int32).  Rows keep their original order within each destination
+    block (stable); rows beyond ``budget`` for a destination are
+    dropped FROM THE WIRE but counted in ``overflow`` — the dispatch
+    capacity should make it zero (callers size budget >= cap), and the
+    host-side driver raises via :func:`repro.launch.steps.
+    raise_on_overflow` when it is not, so an undersized budget corrupts
+    loudly instead of silently truncating the batch.
     """
     m = rows.shape[0]
     assign = assign.astype(jnp.int32)
@@ -51,6 +56,7 @@ def pack_send(rows, assign, n: int, budget: int, fill: int = -1,
     rank = jnp.zeros((m,), jnp.int32).at[order].set(
         jnp.arange(m, dtype=jnp.int32))
     pos = rank - starts[assign]
+    overflow = jnp.sum(pos >= budget).astype(jnp.int32)
     if use_pallas and rows.ndim == 2:
         from ..kernels.exchange_pack import gather_rows_pallas
         # overflow rows (pos >= budget) route past the flat buffer and
@@ -61,10 +67,10 @@ def pack_send(rows, assign, n: int, budget: int, fill: int = -1,
         slot_to_row = jnp.full((n * budget,), -1, jnp.int32).at[slot].set(
             jnp.arange(m, dtype=jnp.int32), mode="drop")
         send = gather_rows_pallas(rows, slot_to_row, fill=fill)
-        return send.reshape((n, budget) + rows.shape[1:]), counts
+        return send.reshape((n, budget) + rows.shape[1:]), counts, overflow
     send = jnp.full((n, budget) + rows.shape[1:], fill, rows.dtype)
     send = send.at[assign, pos].set(rows, mode="drop")
-    return send, counts
+    return send, counts, overflow
 
 
 def compact_recv(recv, recv_counts, out_rows: int, fill: int = -1):
@@ -93,11 +99,13 @@ def ragged_exchange(rows, assign, axis_name: str, budget: int,
     ``budget`` is the static per-link block (>= the dispatch capacity);
     ``out_rows`` sizes the compacted output (default n * budget).
     Returns (out (out_rows, ...), total () int32 valid rows,
-    recv_counts (n,) rows received per src).
+    recv_counts (n,) rows received per src, overflow () int32 rows this
+    shard could not fit on the wire — psummed over the axis so every
+    shard sees the cluster total).
     """
     n = lax.psum(1, axis_name)
-    send, counts = pack_send(rows, assign, n, budget, fill=fill,
-                             use_pallas=use_pallas)
+    send, counts, overflow = pack_send(rows, assign, n, budget, fill=fill,
+                                       use_pallas=use_pallas)
     recv = lax.all_to_all(send, axis_name, 0, 0, tiled=False)
     counts_mat = lax.all_gather(counts, axis_name)        # (src, dst)
     me = lax.axis_index(axis_name)
@@ -105,5 +113,85 @@ def ragged_exchange(rows, assign, axis_name: str, budget: int,
         counts_mat.T, me, axis=0, keepdims=False)         # (n,) from each src
     if out_rows is None:
         out_rows = n * budget
+    # receivers must not read past the wire block an overflowing sender
+    # actually shipped
+    recv_counts = jnp.minimum(recv_counts, budget)
     out, total = compact_recv(recv, recv_counts, out_rows, fill=fill)
-    return out, total, recv_counts
+    return out, total, recv_counts, lax.psum(overflow, axis_name)
+
+
+def ragged_exchange_quant(rows, assign, axis_name: str, budget: int,
+                          codec, out_rows: int | None = None,
+                          fill: int = -1, use_pallas: bool = False):
+    """Quantized variant of :func:`ragged_exchange` for float payloads.
+
+    The send blocks are quantized row-wise with ``codec`` after packing
+    (fused into the Pallas pack kernel when ``use_pallas``) and
+    dequantized on the receiver before compaction, so the collective
+    carries codec-width information instead of fp32.  The simulation
+    wire concatenates codes and per-group scale/zero-point into one
+    float block for a single ``all_to_all`` — the *values* are exactly
+    the codec's (a real wire would bit-pack them; byte accounting lives
+    in the compiled plan / cost layer, not here).  PAD fill rows are
+    constant, so they round-trip exactly and the compacted output's pad
+    plane stays bitwise ``fill``.  ``codec=None`` falls back to the
+    exact fp32 path.
+
+    Returns (out, total, recv_counts, overflow) like
+    :func:`ragged_exchange`.
+    """
+    from ..quant.codecs import dequantize_rows, get_codec, quantize_rows
+
+    c = get_codec(codec)
+    if c is None:
+        return ragged_exchange(rows, assign, axis_name, budget,
+                               out_rows=out_rows, fill=fill,
+                               use_pallas=use_pallas)
+    if rows.ndim != 2:
+        raise ValueError("ragged_exchange_quant packs (m, E) float rows")
+    n = lax.psum(1, axis_name)
+    m, E = rows.shape
+    if use_pallas:
+        from ..kernels.exchange_pack import gather_rows_quant_pallas
+        assign32 = assign.astype(jnp.int32)
+        counts = jnp.zeros((n,), jnp.int32).at[assign32].add(1, mode="drop")
+        starts = jnp.cumsum(counts) - counts
+        order = jnp.argsort(assign32, stable=True)
+        rank = jnp.zeros((m,), jnp.int32).at[order].set(
+            jnp.arange(m, dtype=jnp.int32))
+        pos = rank - starts[assign32]
+        overflow = jnp.sum(pos >= budget).astype(jnp.int32)
+        slot = jnp.where(pos < budget, assign32 * budget + pos, n * budget)
+        slot_to_row = jnp.full((n * budget,), -1, jnp.int32).at[slot].set(
+            jnp.arange(m, dtype=jnp.int32), mode="drop")
+        codes, scale, zp = gather_rows_quant_pallas(
+            rows, slot_to_row, codec=c, fill=fill)
+    else:
+        send, counts, overflow = pack_send(rows, assign, n, budget,
+                                           fill=fill)
+        flat = send.reshape(n * budget, E)
+        codes, scale, zp = quantize_rows(flat, c)
+    if c.kind == "fp16":
+        wire = codes                                  # (n*budget, E) f16
+    else:
+        wire = jnp.concatenate(
+            [codes, scale, zp], axis=-1)              # (n*budget, E + 2G)
+    wire = wire.reshape((n, budget, wire.shape[-1]))
+    recv = lax.all_to_all(wire, axis_name, 0, 0, tiled=False)
+    counts_mat = lax.all_gather(counts, axis_name)
+    me = lax.axis_index(axis_name)
+    recv_counts = lax.dynamic_index_in_dim(
+        counts_mat.T, me, axis=0, keepdims=False)
+    rflat = recv.reshape(n * budget, recv.shape[-1])
+    if c.kind == "fp16":
+        deq = dequantize_rows(rflat, None, None, c)
+    else:
+        G = scale.shape[-1]
+        deq = dequantize_rows(rflat[:, :E], rflat[:, E:E + G],
+                              rflat[:, E + G:], c)
+    if out_rows is None:
+        out_rows = n * budget
+    recv_counts = jnp.minimum(recv_counts, budget)
+    out, total = compact_recv(deq.reshape(n, budget, E), recv_counts,
+                              out_rows, fill=fill)
+    return out, total, recv_counts, lax.psum(overflow, axis_name)

@@ -155,3 +155,101 @@ def pooled_lookup(
         interpret=interpret,
     )(ids_c, w, tbl)
     return out[:, :E]
+
+
+def _kernel_quant(ids_ref, w_ref, codes_ref, scale_ref, zp_ref, out_ref,
+                  *, block_e, B_grp, G, E):
+    b = pl.program_id(0)
+    e = pl.program_id(1)
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # expand this row's per-group scale/zp over the E-block's columns
+    # (G is static — unrolled); columns outside every group (the 128-lane
+    # pad tail) dequantize to 0 and are sliced off by the wrapper
+    col = e * block_e + jax.lax.broadcasted_iota(jnp.int32,
+                                                 out_ref.shape, 1)
+    sc = jnp.zeros(out_ref.shape, jnp.float32)
+    zp = jnp.zeros(out_ref.shape, jnp.float32)
+    for g in range(G):
+        in_g = (col >= g * B_grp) & (col < min((g + 1) * B_grp, E))
+        sc = jnp.where(in_g, scale_ref[0, g], sc)
+        zp = jnp.where(in_g, zp_ref[0, g], zp)
+    w = w_ref[b, f].astype(out_ref.dtype)
+    out_ref[...] += (codes_ref[...].astype(jnp.float32) * sc + zp) * w
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("codec", "block_e", "interpret"))
+def pooled_lookup_quant(
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    zp: jnp.ndarray,
+    ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    codec,
+    block_e: int = DEFAULT_BLOCK_E,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Pooled lookup over a QUANTIZED table: dequant fused into the
+    per-row accumulate, so the f32 table never materializes.
+
+    codes: (V, E) affine codes (float-valued ints, as
+    :func:`repro.quant.codecs.quantize_rows` emits) or an fp16 cast;
+    scale/zp: (V, G) per-group metadata; ids: (B, F) int32, PAD = -1.
+    Each grid step DMAs one code row plus its (1, G) scale/zp rows and
+    accumulates ``(codes * scale + zp) * w`` in-register — bitwise the
+    pooled sum of the dequantized (``fake_quant``-ed) table.
+    """
+    from ..quant.codecs import get_codec
+
+    c = get_codec(codec)
+    if c is None:
+        raise ValueError("pooled_lookup_quant needs a codec")
+    if c.kind == "fp16":
+        return pooled_lookup(codes.astype(jnp.float32), ids, weights,
+                             block_e=block_e, interpret=interpret)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, F = ids.shape
+    V, E = codes.shape
+    G = scale.shape[-1]
+    B_grp = E if c.block is None else min(c.block, E)
+    if weights is None:
+        weights = jnp.ones((B, F), jnp.float32)
+    valid = ids >= 0
+    ids_c = jnp.where(valid, ids, 0).astype(jnp.int32)
+    w = jnp.where(valid, weights, 0.0).astype(jnp.float32)
+
+    pad_e = (-E) % block_e
+    tbl = codes.astype(jnp.float32)
+    if pad_e:
+        tbl = jnp.pad(tbl, ((0, 0), (0, pad_e)))
+    Ep = E + pad_e
+    n_e = Ep // block_e
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_quant, block_e=block_e, B_grp=B_grp,
+                          G=G, E=E),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, n_e, F),
+            in_specs=[
+                pl.BlockSpec((1, block_e),
+                             lambda b, e, f, ids_, w_: (ids_[b, f], e)),
+                pl.BlockSpec((1, G),
+                             lambda b, e, f, ids_, w_: (ids_[b, f], 0)),
+                pl.BlockSpec((1, G),
+                             lambda b, e, f, ids_, w_: (ids_[b, f], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_e),
+                                   lambda b, e, f, ids_, w_: (b, e)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Ep), jnp.float32),
+        interpret=interpret,
+    )(ids_c, w, tbl, scale.astype(jnp.float32), zp.astype(jnp.float32))
+    return out[:, :E]

@@ -71,3 +71,105 @@ def gather_rows_pallas(
         interpret=interpret,
     )(idx, src)
     return out[:, :F]
+
+
+def _quant_kernel(idx_ref, rows_ref, codes_ref, scale_ref, zp_ref, *,
+                  fill, F, B, G, levels):
+    s = pl.program_id(0)
+    valid = idx_ref[s] >= 0
+    row = jnp.where(valid, rows_ref[...],
+                    jnp.full_like(rows_ref[...], fill))      # (1, Fp)
+    col = jax.lax.broadcasted_iota(jnp.int32, row.shape, 1)
+    scale_cols = jnp.zeros_like(row)
+    zp_cols = jnp.zeros_like(row)
+    # G is static — unroll the per-group masked min/max (the pad tail of
+    # a partial terminal group and the 128-lane row padding are both
+    # excluded by the column mask)
+    for g in range(G):
+        in_g = (col >= g * B) & (col < min((g + 1) * B, F))
+        lo = jnp.min(jnp.where(in_g, row, jnp.inf))
+        hi = jnp.max(jnp.where(in_g, row, -jnp.inf))
+        sc = (hi - lo) / levels
+        sc = jnp.where(sc > 0, sc, 1.0)
+        scale_ref[0, g] = sc
+        zp_ref[0, g] = lo
+        scale_cols = jnp.where(in_g, sc, scale_cols)
+        zp_cols = jnp.where(in_g, lo, zp_cols)
+    # pad columns divide by the 0-init scale — mask them to code 0
+    live = col < F
+    codes_ref[...] = jnp.where(
+        live,
+        jnp.clip(jnp.round((row - zp_cols)
+                           / jnp.where(live, scale_cols, 1.0)), 0, levels),
+        0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "fill", "interpret"))
+def gather_rows_quant_pallas(
+    rows: jnp.ndarray,
+    slot_to_row: jnp.ndarray,
+    *,
+    codec,
+    fill: int = -1,
+    interpret: bool | None = None,
+):
+    """Fused pack + quantize: one pass gathers each send slot's row and
+    emits its affine codes plus per-group scale/zero-point.
+
+    rows: (m, F) float32; slot_to_row: (S,) int32 (-1 = PAD slot, which
+    quantizes as a constant ``fill`` row — scale 1, zp ``fill``, codes
+    0 — so it dequantizes exactly back to ``fill``).  Returns
+    ``(codes (S, F) f32-valued ints, scale (S, G) f32, zp (S, G) f32)``
+    matching :func:`repro.quant.codecs.quantize_rows` on the gathered
+    block (zp exactly; scale up to 1 ULP of backend rounding in the
+    ``(hi - lo) / levels`` division, which can flip a boundary code by
+    one).  fp16 needs no scale pass: it reuses
+    :func:`gather_rows_pallas` and casts.
+    """
+    from ..quant.codecs import get_codec
+
+    c = get_codec(codec)
+    if c is None:
+        raise ValueError("gather_rows_quant_pallas needs a codec")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, F = rows.shape
+    (S,) = slot_to_row.shape
+    if c.kind == "fp16":
+        out = gather_rows_pallas(rows, slot_to_row, fill=fill,
+                                 interpret=interpret)
+        one = jnp.ones((S, 1), jnp.float32)
+        return out.astype(jnp.float16), one, jnp.zeros_like(one)
+    B = F if c.block is None else min(c.block, F)
+    G = -(-F // B)
+    idx = slot_to_row.astype(jnp.int32)
+
+    pad_e = (-F) % DEFAULT_BLOCK_E
+    src = jnp.pad(rows.astype(jnp.float32),
+                  ((0, 0), (0, pad_e))) if pad_e else rows.astype(jnp.float32)
+    Fp = F + pad_e
+
+    codes, scale, zp = pl.pallas_call(
+        functools.partial(_quant_kernel, fill=fill, F=F, B=B, G=G,
+                          levels=c.levels),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(S,),
+            in_specs=[
+                pl.BlockSpec((1, Fp),
+                             lambda s, idx_: (jnp.maximum(idx_[s], 0), 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, Fp), lambda s, idx_: (s, 0)),
+                pl.BlockSpec((1, G), lambda s, idx_: (s, 0)),
+                pl.BlockSpec((1, G), lambda s, idx_: (s, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((S, Fp), jnp.float32),
+            jax.ShapeDtypeStruct((S, G), jnp.float32),
+            jax.ShapeDtypeStruct((S, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, src)
+    return codes[:, :F], scale, zp

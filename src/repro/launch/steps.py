@@ -45,7 +45,7 @@ def make_serve_step(cfg: ModelConfig):
 
 def make_esd_exchange(mode: str, n: int, m: int, axis_name: str = "data",
                       use_pallas: bool = False, budget: int | None = None,
-                      out_rows: int | None = None):
+                      out_rows: int | None = None, codec=None):
     """Row-exchange function for the DLRM ESD step (inside shard_map):
     routes any (m, ...) per-sample array (aux features, labels) to the
     worker its sample was assigned to.
@@ -58,9 +58,19 @@ def make_esd_exchange(mode: str, n: int, m: int, axis_name: str = "data",
     ``exchange_budget`` and ``out_rows = n * budget`` so aux rows ride
     the same wire layout as the samples (PAD fill = -1 past the valid
     prefix).
+
+    ``route(a, assign)`` returns ``(out, overflow)``; overflow is the
+    cluster-total rows an undersized ragged budget could not ship
+    (always 0 on the padded path, whose shape admits no overflow).
+
+    ``codec`` (ragged only) quantizes FLOAT payloads on the wire via
+    :func:`repro.exchange.ragged.ragged_exchange_quant`; integer rows
+    (sample ids, labels) always travel exact — codes must not be lossy.
     """
     if mode not in ("padded", "ragged"):
         raise ValueError(f"unknown exchange mode {mode!r}")
+    if codec is not None and mode != "ragged":
+        raise ValueError("codec exchange needs mode='ragged'")
     if mode == "padded":
         if budget not in (None, m // n) or out_rows not in (None, m):
             raise ValueError("padded exchange is fixed-shape: budget/out_rows "
@@ -69,20 +79,45 @@ def make_esd_exchange(mode: str, n: int, m: int, axis_name: str = "data",
         def route(a, assign):
             order = jnp.argsort(assign, stable=True)
             routed = a[order].reshape((n, m // n) + a.shape[1:])
-            return jax.lax.all_to_all(routed, axis_name, 0, 0).reshape(
+            out = jax.lax.all_to_all(routed, axis_name, 0, 0).reshape(
                 (m,) + a.shape[1:])
+            return out, jnp.zeros((), jnp.int32)
     else:
-        from ..exchange.ragged import ragged_exchange
+        from ..exchange.ragged import ragged_exchange, ragged_exchange_quant
+        from ..quant.codecs import get_codec
+        codec = get_codec(codec)
         budget = m // n if budget is None else budget
         out_rows = m if out_rows is None else out_rows
 
         def route(a, assign):
-            out, _, _ = ragged_exchange(a, assign, axis_name, budget,
-                                        out_rows=out_rows,
-                                        use_pallas=use_pallas)
-            return out
+            if (codec is not None and a.ndim == 2
+                    and jnp.issubdtype(a.dtype, jnp.floating)):
+                out, _, _, overflow = ragged_exchange_quant(
+                    a, assign, axis_name, budget, codec, out_rows=out_rows,
+                    use_pallas=use_pallas)
+            else:
+                out, _, _, overflow = ragged_exchange(
+                    a, assign, axis_name, budget, out_rows=out_rows,
+                    use_pallas=use_pallas)
+            return out, overflow
 
     return route
+
+
+def raise_on_overflow(counts: dict) -> None:
+    """Host-side guard for the ragged wire: an undersized budget DROPS
+    rows inside jit (no aborts in a collective), so drivers must check
+    the step's ``exchange_overflow`` counter once it is concrete and
+    fail loudly instead of training on a truncated batch."""
+    ov = counts.get("exchange_overflow")
+    if ov is None:
+        return
+    ov = int(np.asarray(ov))
+    if ov:
+        raise RuntimeError(
+            f"ragged exchange dropped {ov} rows: the per-link budget is "
+            f"smaller than the dispatch capacity (raise cap_slack's budget "
+            f"or fix the assignment)")
 
 
 def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
@@ -90,7 +125,7 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
                          cap_slack: float = 0.0, sparse_esd: bool = True,
                          capacity: int | None = None,
                          use_pallas: bool = False, elastic: bool = False,
-                         max_failures: int = 0):
+                         max_failures: int = 0, codec=None):
     """Jitted stage functions for the pipelined DLRM ESD step
     (repro.pipeline.runner): the per-step work splits into
 
@@ -163,9 +198,12 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
     else:
         budget = m // n if cap_slack <= 0.0 else exchange_budget(cap, m)
         out_rows = m if cap_slack <= 0.0 else n * budget
+    if codec is not None and exchange != "ragged":
+        raise ValueError("codec exchange needs exchange='ragged'")
     if exchange == "ragged":
         route = make_esd_exchange(exchange, n, m, use_pallas=use_pallas,
-                                  budget=budget, out_rows=out_rows)
+                                  budget=budget, out_rows=out_rows,
+                                  codec=codec)
     else:
         route = make_esd_exchange(exchange, n, m, use_pallas=use_pallas)
 
@@ -187,23 +225,30 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
     def advance_shard(s, d, l, a):
         if part is not None:
             s = part.to_linear(s)
-        s2, d2, l2 = route(s, a), route(d, a), route(l, a)
+        # every array rides the same assignment/budget, so one route's
+        # (psummed) overflow counter covers the step
+        s2, overflow = route(s, a)
+        d2, _ = route(d, a)
+        l2, _ = route(l, a)
         need = (need_ids_list(s2, axis) if sparse_esd
                 else need_matrix(s2, axis, V_space))
-        return s2, d2, l2, need
+        return s2, d2, l2, need, overflow
 
     @jax.jit
     def advance(esd_state, sparse, dense, labels, assign):
-        s2, d2, l2, need = shard_map(
+        s2, d2, l2, need, overflow = shard_map(
             advance_shard, mesh=mesh,
             in_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),
-            out_specs=(P(axis, None), P(axis, None), P(axis), P(None, None)),
+            out_specs=(P(axis, None), P(axis, None), P(axis), P(None, None),
+                       P()),
             check_rep=False)(sparse, dense, labels, assign)
         if sparse_esd:
             new_state, counts = esd_state_update_sparse(esd_state, need,
                                                         capacity, part)
         else:
             new_state, counts = esd_state_update(esd_state, need, capacity)
+        counts = dict(counts)
+        counts["exchange_overflow"] = overflow
         return (s2, d2, l2), new_state, counts
 
     def realized_shard(state, s, a):
@@ -246,10 +291,11 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
 
     @jax.jit
     def advance_e(esd_state, sparse, dense, labels, assign, active):
-        s2, d2, l2, need = shard_map(
+        s2, d2, l2, need, overflow = shard_map(
             advance_shard, mesh=mesh,
             in_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),
-            out_specs=(P(axis, None), P(axis, None), P(axis), P(None, None)),
+            out_specs=(P(axis, None), P(axis, None), P(axis), P(None, None),
+                       P()),
             check_rep=False)(sparse, dense, labels, assign)
         # mask BEFORE the update: a dead worker's stale planes must not
         # survive into the committed state (its rejoin is cold)
@@ -259,6 +305,8 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
                                                         capacity, part)
         else:
             new_state, counts = esd_state_update(state, need, capacity)
+        counts = dict(counts)
+        counts["exchange_overflow"] = overflow
         return (s2, d2, l2), new_state, counts
 
     def realized_shard_e(state, s, a, t_arr, col_bias):

@@ -51,6 +51,10 @@ from .steps import make_dlrm_esd_stages
 from ..models import api, dlrm
 from ..optim import get_optimizer
 from ..ps import make_partition
+from ..quant.codecs import (get_codec, quantize_with_feedback,
+                            resolve_link_codecs, ste)
+from ..core.cost import transmission_time_codec
+from .steps import raise_on_overflow
 
 
 # --------------------------------------------------------------------------
@@ -92,6 +96,13 @@ def run_dlrm(args):
         plan = FaultPlan.parse(args.fault_plan, n, args.n_ps)
     if args.resume and args.ckpt_dir is None:
         raise SystemExit("--resume needs --ckpt-dir")
+    codec = get_codec(args.codec)
+    if codec is not None and use_esd and args.exchange != "ragged":
+        raise SystemExit("--codec with ESD needs --exchange ragged (the "
+                         "quantized sample wire rides the ragged executor)")
+    if args.codec_policy != "uniform" and codec is None:
+        raise SystemExit("--codec-policy bandwidth needs --codec (it picks "
+                         "which codec the slow links drop to)")
 
     # multi-PS: partition the V-space (repro.ps), run ids/planes/tables in
     # the PS-linearized space, and cost each op at the owning shard's link
@@ -107,11 +118,21 @@ def run_dlrm(args):
     if part is not None:
         bw = (hetero_ps_bandwidths(n, part.n_ps) if args.ps_hetero
               else np.repeat(DEFAULT_BANDWIDTHS(n)[:, None], part.n_ps, axis=1))
+    else:
+        bw = DEFAULT_BANDWIDTHS(n)
+    if codec is None:
+        # untouched fp32 pricing (bitwise reference path)
         t_tran = jnp.asarray((cfg.embedding_dim * 4.0) / bw, jnp.float32)
     else:
+        # per-link byte width folded into T_j — same pricing the
+        # simulator's Alg.-1 term uses.  Note the actual wire ships ONE
+        # uniform codec (--codec); a "bandwidth" policy prices the
+        # per-link mix into the dispatch objective (fast links fp16,
+        # slow links the codec) ahead of true per-link wire codecs.
+        link_codecs = resolve_link_codecs(args.codec_policy, bw, codec)
         t_tran = jnp.asarray(
-            (cfg.embedding_dim * 4.0) / DEFAULT_BANDWIDTHS(n), jnp.float32
-        )
+            transmission_time_codec(cfg.embedding_dim, bw, link_codecs),
+            jnp.float32)
     optimizer = get_optimizer("rowwise_adagrad", args.lr)
     params = dlrm.init_params(jax.random.key(args.seed), cfg, wl)
     if part is not None:
@@ -144,6 +165,37 @@ def run_dlrm(args):
         params, opt_state = optimizer.update(grads, opt_state, params)
         return params, opt_state, loss
 
+    # quantized PS push/pull (--codec): rows DOWN — workers compute on
+    # the wire-dequantized tables (STE keeps the embedding gradient
+    # alive through round()); grads UP — table gradients are pushed
+    # through the codec with error feedback (the quantization residual
+    # carries to the next step), and rowwise-adagrad sees the *applied*
+    # g_hat so its per-row accumulator tracks reality.  codec=None never
+    # builds or calls this function — train_jit above stays the bitwise
+    # fp32 path.
+    quant_keys = tuple(k for k in ("embed", "wide") if k in params)
+    qres = ({k: jnp.zeros_like(params[k]) for k in quant_keys}
+            if codec is not None else None)
+
+    @partial(jax.jit, donate_argnums=(0, 1, 2))
+    def train_jit_q(params, opt_state, qres, sparse, dense, labels):
+        if not use_esd and part is not None:
+            sparse = part.to_linear(sparse)
+
+        def loss_q(p):
+            qp = dict(p)
+            for kk in quant_keys:
+                qp[kk] = ste(p[kk], codec)
+            return loss_fn(qp, cfg, sparse, dense, labels)
+
+        loss, grads = jax.value_and_grad(loss_q)(params)
+        grads, new_qres = dict(grads), {}
+        for kk in quant_keys:
+            grads[kk], new_qres[kk] = quantize_with_feedback(
+                grads[kk], qres[kk], codec)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, new_qres, loss
+
     esd = None
     if use_esd:
         # ESD: decide / advance / train stages driven by the pipelined
@@ -156,7 +208,8 @@ def run_dlrm(args):
             exchange=args.exchange, cap_slack=args.cap_slack,
             sparse_esd=sparse_esd, capacity=capacity if capacity < V else None,
             elastic=plan is not None,
-            max_failures=plan.max_inactive() if plan is not None else 0)
+            max_failures=plan.max_inactive() if plan is not None else 0,
+            codec=codec)
         if sparse_esd:
             # L = out_rows*F ids per worker post-exchange (need_ids_list
             # width) — out_rows from the stage factory, so the slot-buffer
@@ -171,11 +224,15 @@ def run_dlrm(args):
         tmpl = {"params": params, "opt": opt_state}
         if use_esd:
             tmpl["esd"] = esd
+        if codec is not None:
+            tmpl["qres"] = qres
         restored, start = restore_checkpoint(args.ckpt_dir, tmpl)
         params = jax.device_put(restored["params"], shardings)
         opt_state = jax.tree.map(jnp.asarray, restored["opt"])
         if use_esd:
             esd = jax.tree.map(jnp.asarray, restored["esd"])
+        if codec is not None:
+            qres = jax.tree.map(jnp.asarray, restored["qres"])
         if args.verbose:
             print(json.dumps({"resumed_from_step": start}), flush=True)
     if start >= args.steps:
@@ -194,6 +251,9 @@ def run_dlrm(args):
         last_t = now
         esd_snap = esd_seen.pop(i, None)
         if counts is not None:
+            # loud failure on silent row loss: an undersized ragged
+            # budget must never truncate the batch unnoticed
+            raise_on_overflow(counts)
             base_ops = ("miss_pull", "update_push", "evict_push")
             ops = {op: np.asarray(counts[op]) for op in base_ops}
             if part is not None:
@@ -219,6 +279,8 @@ def run_dlrm(args):
             tree = {"params": params, "opt": opt_state}
             if esd_snap is not None:
                 tree["esd"] = esd_snap
+            if codec is not None:
+                tree["qres"] = qres
             save_checkpoint(args.ckpt_dir, i + 1, tree)
         return rec
 
@@ -247,8 +309,12 @@ def run_dlrm(args):
                 (sparse, dense, labels), meta = next(dev_batches)
             except StopIteration:
                 break
-            params, opt_state, loss = train_jit(params, opt_state,
-                                                sparse, dense, labels)
+            if codec is None:
+                params, opt_state, loss = train_jit(params, opt_state,
+                                                    sparse, dense, labels)
+            else:
+                params, opt_state, qres, loss = train_jit_q(
+                    params, opt_state, qres, sparse, dense, labels)
             record(i, loss, None, meta, {})
         return metrics
 
@@ -307,8 +373,12 @@ def run_dlrm(args):
                                     t_arr, bias, act)
 
     def train_fn(x):
-        nonlocal params, opt_state
-        params, opt_state, loss = train_jit(params, opt_state, *x)
+        nonlocal params, opt_state, qres
+        if codec is None:
+            params, opt_state, loss = train_jit(params, opt_state, *x)
+        else:
+            params, opt_state, qres, loss = train_jit_q(
+                params, opt_state, qres, *x)
         return loss
 
     runner = PipelinedRunner(
@@ -437,6 +507,16 @@ def build_parser():
     ap.add_argument("--compute-time-s", type=float, default=0.010,
                     help="nominal per-step compute time; prices straggler "
                          "slowdown into the dispatch cost bias")
+    ap.add_argument("--codec", default=None,
+                    help="wire codec for embedding traffic: none (exact "
+                         "fp32), fp16, int8, int4, optionally with a "
+                         "quantization block like int8:32 (default: none)")
+    ap.add_argument("--codec-policy", choices=("uniform", "bandwidth"),
+                    default="uniform",
+                    help="uniform: every link uses --codec; bandwidth: "
+                         "links at/above the median bandwidth get fp16, "
+                         "slower links get --codec (priced into the "
+                         "dispatch cost)")
     ap.add_argument("--ckpt-dir", type=Path, default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true",

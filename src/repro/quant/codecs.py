@@ -1,0 +1,307 @@
+"""Quantization codecs for the embedding wire paths (DQRM-style).
+
+Every transmission the repro stack prices — miss pulls and update pushes
+of E-dim embedding rows over worker<->PS links, gradient pushes, and the
+float payload riding the worker<->worker sample exchange — ships fp32
+today.  DQRM (PAPERS.md) shows DLRM tables tolerate int8/int4 with
+negligible accuracy loss, so the wire can carry 2-8x fewer bytes; the
+torchrec exemplar (SNIPPETS.md snippet 2) threads exactly such codecs
+through its sharder as ``QCommsConfig``.
+
+Wire format
+-----------
+A codec maps a float32 row of ``E`` elements to
+
+  * ``fp16``  — a dtype cast, 2 bytes/elem, no side metadata;
+  * ``int8``  — per-group affine codes ``q = round((x - zp) / scale)``
+    in [0, 255], 1 byte/elem;
+  * ``int4``  — the same affine map into [0, 15], two codes packed per
+    byte (``ceil(E/2)`` bytes/elem-pair, odd tails pad a zero nibble).
+
+A *group* is the scale/zero-point granularity: the whole row (per-row,
+the default) or ``block`` consecutive elements (per-block, written
+``"int8:64"``).  ``zp = min(group)``, ``scale = (max - min) / levels``
+with zero-range groups snapping scale to 1.0 — so a constant group
+(PAD fill rows included) round-trips *exactly*, and any group obeys
+``|x - dequantize(quantize(x))| <= scale / 2``.
+
+Byte accounting: :func:`wire_row_bytes` counts payload code bytes only
+(int8 = exactly E, the headline 4x), :func:`meta_row_bytes` the
+scale/zero-point side channel (8 bytes per group, zero for fp16) —
+reported separately, mirroring how the exchange plan's counts/offsets
+side channel is never charged as wire bytes.  The cost layer
+(:func:`repro.core.cost.transmission_time_codec`) charges payload+meta.
+
+All array ops are jnp (jit/shard_map friendly) and accept any
+``(..., E)`` shape, grouping over the trailing dim.  ``codec=None``
+everywhere means fp32 — callers must keep that path untouched
+(bitwise-pinned in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "Codec", "get_codec", "codec_name", "quantize_rows", "dequantize_rows",
+    "fake_quant", "ste", "quantize_with_feedback", "pack_int4",
+    "unpack_int4", "wire_row_bytes", "meta_row_bytes", "row_wire_bytes",
+    "resolve_link_codecs", "CODEC_NAMES",
+]
+
+CODEC_NAMES = ("fp16", "int8", "int4")
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One wire codec: bit width + scale/zero-point group size."""
+
+    kind: str                 # "fp16" | "int8" | "int4"
+    block: int | None = None  # elems per scale group (None = whole row)
+
+    def __post_init__(self):
+        if self.kind not in CODEC_NAMES:
+            raise ValueError(f"unknown codec kind {self.kind!r}; "
+                             f"expected one of {CODEC_NAMES}")
+        if self.block is not None and self.block < 1:
+            raise ValueError(f"codec block must be >= 1, got {self.block}")
+        if self.kind == "fp16" and self.block is not None:
+            raise ValueError("fp16 is a dtype cast; it has no scale groups")
+
+    @property
+    def bits(self) -> int:
+        return {"fp16": 16, "int8": 8, "int4": 4}[self.kind]
+
+    @property
+    def levels(self) -> int:
+        """Top code of the affine range (0..levels)."""
+        return (1 << self.bits) - 1 if self.kind != "fp16" else 0
+
+    @property
+    def name(self) -> str:
+        return self.kind if self.block is None else f"{self.kind}:{self.block}"
+
+
+def get_codec(spec) -> Codec | None:
+    """Resolve ``None`` / ``"none"`` / ``"int8"`` / ``"int4:32"`` / Codec."""
+    if spec is None or isinstance(spec, Codec):
+        return spec
+    s = str(spec).strip().lower()
+    if s in ("", "none", "fp32", "float32"):
+        return None
+    kind, _, blk = s.partition(":")
+    return Codec(kind, int(blk) if blk else None)
+
+
+def codec_name(spec) -> str:
+    c = get_codec(spec)
+    return "fp32" if c is None else c.name
+
+
+# --------------------------------------------------------------------------
+# byte accounting (host-side, pure python — the cost layer's vocabulary)
+# --------------------------------------------------------------------------
+def _groups(elems: int, codec: Codec) -> int:
+    if codec.block is None:
+        return 1
+    return -(-elems // codec.block)
+
+
+def wire_row_bytes(elems: int, codec) -> int:
+    """Payload code bytes for one ``elems``-wide row (no metadata)."""
+    c = get_codec(codec)
+    if c is None:
+        return 4 * elems
+    if c.kind == "fp16":
+        return 2 * elems
+    if c.kind == "int8":
+        return elems
+    return (elems + 1) // 2          # int4: two codes per byte
+
+
+def meta_row_bytes(elems: int, codec) -> int:
+    """Scale + zero-point side-channel bytes per row (fp32 pair/group)."""
+    c = get_codec(codec)
+    if c is None or c.kind == "fp16":
+        return 0
+    return 8 * _groups(elems, c)
+
+
+def row_wire_bytes(elems: int, codec) -> int:
+    """Payload + metadata — what the link actually carries per row."""
+    return wire_row_bytes(elems, codec) + meta_row_bytes(elems, codec)
+
+
+def resolve_link_codecs(policy: str, bandwidths, codec=None,
+                        fast="fp16") -> np.ndarray | None:
+    """Per-link codec names from a policy over link bandwidths.
+
+    ``"uniform"`` tags every link with ``codec`` (None -> no codecs at
+    all).  ``"bandwidth"`` splits at the median: links at or above it
+    afford the ``fast`` codec (fp16), slower edge links drop to
+    ``codec`` (default int4) — the heterogeneous-width scenario that
+    reshapes Alg.-1 dispatch.  ``bandwidths`` may be (n,) or (n, n_ps);
+    the result matches its shape (dtype object, entries are codec
+    names).
+    """
+    bw = np.asarray(bandwidths, np.float64)
+    if policy == "uniform":
+        if codec is None:
+            return None
+        return np.full(bw.shape, codec_name(codec), object)
+    if policy != "bandwidth":
+        raise ValueError(f"unknown codec policy {policy!r}")
+    slow = codec_name(codec if codec is not None else "int4")
+    out = np.where(bw >= np.median(bw), codec_name(fast), slow)
+    return out.astype(object)
+
+
+# --------------------------------------------------------------------------
+# quantize / dequantize (jnp, trailing-dim groups)
+# --------------------------------------------------------------------------
+def _group_bounds(x, codec: Codec):
+    """Per-group (lo, hi) of ``x`` (..., E), masking the pad tail when E
+    does not divide the block."""
+    import jax.numpy as jnp
+
+    E = x.shape[-1]
+    B = E if codec.block is None else min(codec.block, E)
+    pad = (-E) % B
+    if pad:
+        xp = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+    else:
+        xp = x
+    g = xp.reshape(x.shape[:-1] + ((E + pad) // B, B))
+    if pad:
+        col = jnp.arange(B)
+        live = (jnp.arange((E + pad) // B)[:, None] * B + col[None, :]) < E
+        lo = jnp.min(jnp.where(live, g, jnp.inf), axis=-1)
+        hi = jnp.max(jnp.where(live, g, -jnp.inf), axis=-1)
+    else:
+        lo = g.min(axis=-1)
+        hi = g.max(axis=-1)
+    return lo, hi, B, pad
+
+
+def _expand(meta, B: int, E: int):
+    """Broadcast per-group (..., G) metadata back over (..., E)."""
+    import jax.numpy as jnp
+
+    out = jnp.repeat(meta, B, axis=-1)
+    return out[..., :E]
+
+
+def quantize_rows(x, codec):
+    """x (..., E) float -> (codes, scale, zp).
+
+    fp16: ``codes`` is the fp16 cast; scale/zp are 1/0 placeholders so
+    every codec shares the uniform ``codes * scale + zp`` dequant.  int
+    codecs: ``codes`` are float-valued integers in [0, levels] (cast or
+    :func:`pack_int4` them for a real wire; XLA keeps them f32 here),
+    scale/zp are (..., G) per-group fp32 with zero-range groups snapped
+    to scale 1.0 (constant groups round-trip exactly).
+    """
+    import jax.numpy as jnp
+
+    c = get_codec(codec)
+    if c is None:
+        raise ValueError("quantize_rows needs a codec (None is the fp32 "
+                         "identity path — do not call through it)")
+    x = x.astype(jnp.float32)
+    if c.kind == "fp16":
+        one = jnp.ones(x.shape[:-1] + (1,), jnp.float32)
+        return x.astype(jnp.float16), one, jnp.zeros_like(one)
+    lo, hi, B, _ = _group_bounds(x, c)
+    scale = (hi - lo) / c.levels
+    scale = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(
+        jnp.round((x - _expand(lo, B, x.shape[-1]))
+                  / _expand(scale, B, x.shape[-1])), 0, c.levels)
+    return codes, scale, lo
+
+
+def dequantize_rows(codes, scale, zp, codec):
+    """Invert :func:`quantize_rows`: ``codes * scale + zp`` (fp32)."""
+    import jax.numpy as jnp
+
+    c = get_codec(codec)
+    if c is None:
+        raise ValueError("dequantize_rows needs a codec")
+    if c.kind == "fp16":
+        return codes.astype(jnp.float32)
+    E = codes.shape[-1]
+    B = E if c.block is None else min(c.block, E)
+    return (codes.astype(jnp.float32) * _expand(scale, B, E)
+            + _expand(zp, B, E))
+
+
+def fake_quant(x, codec):
+    """dequantize(quantize(x)) — the value the receiver reconstructs."""
+    c = get_codec(codec)
+    if c is None:
+        return x
+    codes, scale, zp = quantize_rows(x, c)
+    return dequantize_rows(codes, scale, zp, c)
+
+
+def ste(x, codec):
+    """Straight-through estimator: forward = fake_quant(x), gradient =
+    identity (round() has zero derivative; without STE a fake-quantized
+    table would stop every embedding gradient)."""
+    import jax
+
+    c = get_codec(codec)
+    if c is None:
+        return x
+    return x + jax.lax.stop_gradient(fake_quant(x, c) - x)
+
+
+def quantize_with_feedback(g, residual, codec):
+    """Error-feedback gradient quantization (grads-up PS push).
+
+    Returns ``(g_hat, new_residual)``: the pushed gradient is
+    ``fake_quant(g + residual)`` and the quantization error carries to
+    the next step, so the bias a biased quantizer would accumulate is
+    re-injected instead of lost.  Rowwise-adagrad compatibility: the
+    optimizer must see ``g_hat`` (the grad the PS actually applies), so
+    its per-row accumulator tracks the applied updates.  codec=None is
+    the exact identity (residual stays zero).
+    """
+    c = get_codec(codec)
+    if c is None:
+        return g, residual
+    acc = g + residual
+    g_hat = fake_quant(acc, c)
+    return g_hat, acc - g_hat
+
+
+# --------------------------------------------------------------------------
+# int4 nibble packing (the byte-exact wire layout)
+# --------------------------------------------------------------------------
+def pack_int4(codes):
+    """(..., E) int codes in [0, 15] -> (..., ceil(E/2)) uint8.
+
+    Even columns take the low nibble, odd the high; an odd tail packs a
+    zero high nibble (exactly the :func:`wire_row_bytes` count).
+    """
+    import jax.numpy as jnp
+
+    E = codes.shape[-1]
+    q = jnp.clip(codes, 0, 15).astype(jnp.uint8)
+    if E % 2:
+        q = jnp.concatenate(
+            [q, jnp.zeros(q.shape[:-1] + (1,), jnp.uint8)], axis=-1)
+    pairs = q.reshape(q.shape[:-1] + ((E + 1) // 2, 2))
+    return pairs[..., 0] | (pairs[..., 1] << 4)
+
+
+def unpack_int4(packed, E: int):
+    """Invert :func:`pack_int4` back to (..., E) uint8 codes."""
+    import jax.numpy as jnp
+
+    lo = packed & jnp.uint8(0x0F)
+    hi = (packed >> 4) & jnp.uint8(0x0F)
+    out = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (-1,))
+    return out[..., :E]

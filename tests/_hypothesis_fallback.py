@@ -5,7 +5,8 @@ property tests fall back to deterministic seeded random sampling with the
 same @settings/@given/strategies surface.  If real hypothesis is
 installed it is used instead (see the import dance in the test modules).
 
-Supported: st.integers(lo, hi), st.lists(elem, min_size, max_size),
+Supported: st.integers(lo, hi), st.floats(lo, hi),
+st.sampled_from(seq), st.lists(elem, min_size, max_size),
 st.data() with data.draw(strategy), @settings(max_examples, deadline),
 @given(*strategies).
 """
@@ -29,6 +30,15 @@ def integers(lo: int, hi: int) -> _Strategy:
     return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
 
 
+def floats(lo: float, hi: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
 def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
     def draw(rng):
         size = int(rng.integers(min_size, max_size + 1))
@@ -50,6 +60,8 @@ def data() -> _Strategy:
 
 class _St:
     integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
     lists = staticmethod(lists)
     data = staticmethod(data)
 

@@ -44,6 +44,20 @@ class TestJittableDispatchers:
         a = np.asarray(hybrid_dispatch_jax(C, m, alpha))
         assert np.bincount(a, minlength=n).max() <= m // n
 
+    def test_hybrid_tied_costs_respect_cap(self):
+        """Regression: auction tie wars leave stragglers, and the old
+        fallback dumped them ALL on one argmin-loaded worker — 2x the
+        capacity on duplicated-row cost matrices (the empty-cache first
+        step), which the ragged wire then silently truncated."""
+        m, n, cap = 32, 4, 8
+        for seed in range(8):
+            row = np.random.default_rng(seed).random((1, n))
+            C = jnp.asarray(np.repeat(row, m, axis=0), jnp.float32)
+            a = np.asarray(hybrid_dispatch_jax(C, m, 1.0, cap=cap))
+            counts = np.bincount(a, minlength=n)
+            assert counts.max() <= cap, (seed, counts)
+            assert counts.sum() == m
+
 
 class TestStateUpdate:
     def test_matches_cluster_cache(self, rng):

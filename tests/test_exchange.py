@@ -55,9 +55,9 @@ def _emulated_exchange(samples, assign, n, budget, use_pallas=False):
     m = k // n
     sends, counts = [], []
     for i in range(n):
-        s, c = pack_send(jnp.asarray(samples[i * m:(i + 1) * m]),
-                         jnp.asarray(assign[i * m:(i + 1) * m]),
-                         n, budget, use_pallas=use_pallas)
+        s, c, _ = pack_send(jnp.asarray(samples[i * m:(i + 1) * m]),
+                            jnp.asarray(assign[i * m:(i + 1) * m]),
+                            n, budget, use_pallas=use_pallas)
         sends.append(np.asarray(s))
         counts.append(np.asarray(c))
     sends, counts = np.stack(sends), np.stack(counts)
@@ -117,6 +117,28 @@ class TestPlan:
         with pytest.raises(ValueError):
             bucket_sizes(np.array([5]), cap=4)
 
+    def test_bucket_cap_clamp_non_pow2(self):
+        """Regression: a non-pow2 cap used to replace EVERY bucket above
+        the largest pow2 <= cap with the raw count, leaking one distinct
+        block shape per count; now cap itself is the single terminal
+        bucket."""
+        out = bucket_sizes(np.array([70, 3, 0, 96]), cap=96)
+        np.testing.assert_array_equal(out, np.array([96, 4, 0, 96]))
+        for b in out[out > 0]:
+            assert b == 96 or (b & (b - 1)) == 0
+
+    def test_schedule_len_bound(self):
+        """len(schedule) <= floor(log2(cap)) + 2: all pow2s up to cap
+        plus the terminal cap bucket."""
+        rng = np.random.default_rng(0)
+        for cap in (7, 8, 96, 100):
+            n, m = 8, cap
+            assign = rng.integers(0, n, n * m)
+            plan = compile_plan(assign, n, cap=cap)
+            assert len(plan.schedule) <= int(np.floor(np.log2(cap))) + 2
+            for b in plan.schedule:
+                assert b == cap or (b & (b - 1)) == 0
+
     def test_skew_pad_reduction(self):
         """Fully skewed: ragged ships zero pad, padded ships ~n x."""
         n, m = 8, 32
@@ -132,6 +154,47 @@ class TestPlan:
         assert plan.stats.pad_bytes_ragged == 0
         assert plan.stats.pad_bytes_padded == 0
         assert plan.schedule == (m // n,)
+        # regression: both-zero pad is the BEST case and reports 1.0
+        # (it used to report 0.0, the worst score)
+        assert plan.stats.pad_reduction == 1.0
+
+    def test_elastic_padded_baseline_counts_active_sources(self):
+        """Regression: with an elastic membership mask the fixed-shape
+        baseline used to charge all n sources, but dead sources hold no
+        samples — padded_bytes is n_active^2 * block * row_bytes."""
+        n, m = 4, 9
+        active = np.array([True, True, False, True])
+        rng = np.random.default_rng(3)
+        live = np.flatnonzero(active)
+        assign = live[rng.integers(0, live.size, n * m)]
+        plan = compile_plan(assign, n, active=active)
+        block = plan.padded_block
+        assert plan.stats.padded_bytes == 3 * 3 * block * 4
+        # inactive destination is a hard error
+        bad = assign.copy()
+        bad[0] = 2
+        with pytest.raises(ValueError):
+            compile_plan(bad, n, active=active)
+
+    def test_codec_tagged_plan(self):
+        """int8 plan: payload is exactly 4x smaller than fp32, scale/zp
+        travel in meta_bytes, never in the pad accounting."""
+        n, m, E = 4, 16, 32
+        rng = np.random.default_rng(7)
+        assign = rng.integers(0, n, n * m)
+        plain = compile_plan(assign, n, row_bytes=4 * E)
+        quant = compile_plan(assign, n, codec="int8", row_elems=E)
+        assert quant.stats.codec == "int8"
+        assert quant.stats.byte_reduction == 4.0
+        assert quant.stats.payload_bytes * 4 == plain.stats.payload_bytes
+        assert quant.stats.payload_fp32_bytes == plain.stats.payload_bytes
+        assert quant.stats.meta_bytes > 0
+        s = quant.stats.summary()
+        assert s["codec"] == "int8" and s["byte_reduction"] == 4.0
+        # plain plans carry no codec keys
+        assert "codec" not in plain.stats.summary()
+        with pytest.raises(ValueError):
+            compile_plan(assign, n, codec="int8")  # row_elems missing
 
     def test_bad_inputs(self):
         with pytest.raises(ValueError):
@@ -190,10 +253,11 @@ class TestRaggedExecutor:
         n, m, F, budget = 4, 24, 5, 8
         rows = jnp.asarray(rng.integers(0, 100, (m, F)), jnp.int32)
         assign = jnp.asarray(rng.integers(0, n, (m,)), jnp.int32)
-        s_j, c_j = pack_send(rows, assign, n, budget)
-        s_p, c_p = pack_send(rows, assign, n, budget, use_pallas=True)
+        s_j, c_j, o_j = pack_send(rows, assign, n, budget)
+        s_p, c_p, o_p = pack_send(rows, assign, n, budget, use_pallas=True)
         np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_j))
         np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_j))
+        assert int(o_j) == int(o_p)
 
     def test_pallas_pack_drops_overflow_like_jnp(self):
         """Rows beyond a destination's budget are dropped, not routed
@@ -202,10 +266,28 @@ class TestRaggedExecutor:
         n, budget = 3, 2
         rows = jnp.arange(12, dtype=jnp.int32).reshape(6, 2)
         assign = jnp.asarray([0, 0, 1, 0, 2, 2], jnp.int32)  # dst 0 overflows
-        s_j, c_j = pack_send(rows, assign, n, budget)
-        s_p, c_p = pack_send(rows, assign, n, budget, use_pallas=True)
+        s_j, c_j, o_j = pack_send(rows, assign, n, budget)
+        s_p, c_p, o_p = pack_send(rows, assign, n, budget, use_pallas=True)
         np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_j))
         np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_j))
+        # the dropped third dst-0 row is counted, both paths
+        assert int(o_j) == 1 and int(o_p) == 1
+
+    def test_pack_send_overflow_count(self):
+        n, budget = 4, 2
+        rows = jnp.arange(16, dtype=jnp.int32).reshape(8, 2)
+        assign = jnp.zeros((8,), jnp.int32)      # all 8 rows -> dst 0
+        _, counts, ov = pack_send(rows, assign, n, budget)
+        assert int(ov) == 6                      # 8 rows, 2 fit
+        assert int(counts[0]) == 8               # counts report intent
+
+    def test_raise_on_overflow(self):
+        from repro.launch.steps import raise_on_overflow
+
+        raise_on_overflow({})                                    # no counter
+        raise_on_overflow({"exchange_overflow": jnp.zeros((), jnp.int32)})
+        with pytest.raises(RuntimeError, match="dropped 3 rows"):
+            raise_on_overflow({"exchange_overflow": jnp.asarray(3)})
 
     def test_gather_rows_pallas(self, rng):
         rows = jnp.asarray(rng.integers(0, 9, (6, 4)), jnp.int32)
@@ -361,7 +443,7 @@ assert orig == got, "exchange lost/duplicated samples"
 # 3) raw ragged_exchange with an adversarial assignment (empty dsts)
 skew = np.zeros(n * m, np.int64)
 def g(s, a):
-    out, total, rc = ragged_exchange(s, a, "data", m, out_rows=n * m)
+    out, total, rc, _ = ragged_exchange(s, a, "data", m, out_rows=n * m)
     return out, total[None], rc[None]
 out_k, tot, rc = shard_map(
     g, mesh=mesh, in_specs=(P("data", None), P("data")),
