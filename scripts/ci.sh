@@ -41,7 +41,9 @@ done
 # mid-suite — byte-compile every tree we ship, one end-to-end quickstart
 # pass (exercises core cost/dispatch/cache on a real batch), the quick
 # ragged-exchange sweep (plan bytes + slack Alg.-1 drop), the quick
-# pipeline sweep (decision hiding + lookahead miss reduction) and the
+# pipeline sweep (decision hiding + lookahead miss reduction + the
+# prefetch W x depth grid and W=0-vs-W=8 driver demand-miss acceptance
+# run against the Belady bound) and the
 # quick elastic sweep (fault-injection smoke: crash + rejoin must keep
 # >= 70% of oracle throughput with finite stats); the quick sweeps write
 # *_quick.json artifacts, never the tracked full-sweep records

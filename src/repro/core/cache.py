@@ -29,6 +29,18 @@ when nothing else is left, so capacity pressure never fails), which is
 how window dedup turns into fewer miss pulls under skew.  ``protect=None``
 (default) is the unchanged bitwise path.
 
+Passing an :class:`EvictPlan` (built from the window metadata) upgrades
+the shield to a first/last-use-*exact* evict order: candidates without a
+pending use inside the window go first (in policy order — among rows
+Belady cannot distinguish the policy is the tie-break), then in-window
+rows by *descending* next use, which is exactly Belady's farthest-in-
+future rule over the announced horizon.  A plan also turns on the
+prefetched-vs-demand miss split: a miss on an id the *previous* step's
+plan announced was knowable at least one step early, so a window-driven
+prefetcher could have pulled it overlapped with training
+(``IterStats.miss_prefetched``); the remainder is unavoidable demand
+traffic (``IterStats.miss_demand``).
+
 Two engines:
   * :class:`ClusterCache` — dense reference: (n, V) boolean-plane algebra,
     O(n*V) per iteration.
@@ -52,10 +64,43 @@ from typing import Literal, Sequence
 
 import numpy as np
 
-__all__ = ["ClusterCache", "SparseClusterCache", "IterStats", "Policy",
-           "init_ps_stats", "ps_op_count"]
+__all__ = ["ClusterCache", "SparseClusterCache", "IterStats", "EvictPlan",
+           "Policy", "init_ps_stats", "ps_op_count"]
 
 Policy = Literal["emark", "lru", "lfu"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EvictPlan:
+    """First/last-use-exact eviction plan from one window's metadata.
+
+    ``uids`` must be sorted ascending; ``next_use``/``last_use`` are the
+    window-relative first/last batch index touching each uid (0 = the
+    very next batch).  An empty plan is the unchanged no-protect path.
+    """
+
+    uids: np.ndarray        # (U,) sorted ids (cache id space)
+    next_use: np.ndarray    # (U,) first touching window batch per uid
+    last_use: np.ndarray    # (U,) last touching window batch per uid
+
+    @property
+    def n(self) -> int:
+        return int(self.uids.size)
+
+    @classmethod
+    def from_window(cls, meta) -> "EvictPlan":
+        """Build from a :class:`repro.pipeline.window.WindowMeta` (whose
+        ``uids`` are already sorted)."""
+        return cls(uids=meta.uids, next_use=meta.first_use,
+                   last_use=meta.last_use)
+
+    def linearize(self, part) -> "EvictPlan":
+        """Map ids into ``part``'s PS-linear space (re-sorting, since the
+        linear map is not monotone for hashed layouts)."""
+        lin = part.to_linear(self.uids)
+        order = np.argsort(lin, kind="stable")
+        return EvictPlan(uids=lin[order], next_use=self.next_use[order],
+                         last_use=self.last_use[order])
 
 
 def init_ps_stats(stats: "IterStats", n: int, n_ps: int) -> None:
@@ -92,6 +137,14 @@ class IterStats:
     miss_pull_ps: np.ndarray | None = None     # (n, n_ps)
     update_push_ps: np.ndarray | None = None   # (n, n_ps)
     evict_push_ps: np.ndarray | None = None    # (n, n_ps)
+    # prefetched-vs-demand miss split, populated by the cluster-cache
+    # engines when the caller passes EvictPlan protection (a miss is
+    # "prefetched" when the previous step's plan announced the id, i.e.
+    # a window prefetcher had >= 1 full step to pull it early)
+    miss_prefetched: np.ndarray | None = None       # (n,)
+    miss_demand: np.ndarray | None = None           # (n,)
+    miss_prefetched_ps: np.ndarray | None = None    # (n, n_ps)
+    miss_demand_ps: np.ndarray | None = None        # (n, n_ps)
 
     def cost(self, t_tran: np.ndarray) -> float:
         ops = self.miss_pull + self.update_push + self.evict_push
@@ -167,6 +220,9 @@ class ClusterCache:
         self.target = np.ones(self.n, np.int32)   # Emark epoch counter
         self.it = 0
         self._rng = np.random.default_rng(seed)
+        # ids the previous step's EvictPlan announced (sorted) — the
+        # basis of the prefetched-vs-demand miss split
+        self._announced: np.ndarray | None = None
 
     # -- views used by Alg. 1 ------------------------------------------------
     @property
@@ -189,9 +245,10 @@ class ClusterCache:
         """Run one iteration; ``batches[j]`` = unique ids needed by worker j.
 
         ``protect``: optional lookahead shield the victim scan evicts
-        last — either a sorted id array or a ``(sorted_ids, next_use)``
-        pair (what the simulator passes from the window metadata; the
-        grading is described on ``_select_victims``)."""
+        last — a sorted id array, a ``(sorted_ids, next_use)`` pair, or
+        an :class:`EvictPlan` for the first/last-use-exact order plus
+        the prefetched-vs-demand miss split (grading described on
+        ``_select_victims``)."""
         n, V = self.n, self.V
         self.it += 1
         need = np.zeros((n, V), bool)
@@ -207,6 +264,7 @@ class ClusterCache:
             hits=np.zeros(n, np.int64),
         )
         self._init_ps_stats(stats)
+        self._init_split(stats)
 
         # ---- Phase A: update push ------------------------------------------
         need_any = need.any(axis=0)                      # (V,)
@@ -242,6 +300,7 @@ class ClusterCache:
             have = self.present[j, ids] & self.latest[j, ids]
             miss_ids = ids[~have]
             stats.miss_pull[j] += len(miss_ids)
+            self._split_miss(j, miss_ids, stats)
             if self.part is not None:
                 stats.miss_pull_ps[j] += self._ps_count(miss_ids)
             # refresh stale-resident entries in place (no eviction needed)
@@ -281,6 +340,7 @@ class ClusterCache:
         # copies on workers that did NOT train x become stale
         trained = need.any(axis=0)
         self.latest &= ~(trained[None, :] & ~need)
+        self._finish_split(stats, protect)
         return stats
 
     # -- multi-PS accounting helpers -----------------------------------------
@@ -290,6 +350,33 @@ class ClusterCache:
 
     def _ps_count(self, ids) -> np.ndarray:
         return ps_op_count(self.part, ids)
+
+    # -- prefetched-vs-demand miss split -------------------------------------
+    def _init_split(self, stats: IterStats):
+        stats.miss_prefetched = np.zeros(self.n, np.int64)
+        if self.part is not None:
+            stats.miss_prefetched_ps = np.zeros((self.n, self.part.n_ps),
+                                                np.int64)
+
+    def _split_miss(self, j: int, miss_ids: np.ndarray, stats: IterStats):
+        """Count how many of worker j's misses the previous step's plan
+        announced (a window prefetcher could have hidden them)."""
+        a = self._announced
+        if a is None or not len(a) or not len(miss_ids):
+            return
+        pos = np.minimum(np.searchsorted(a, miss_ids), len(a) - 1)
+        pre = miss_ids[a[pos] == miss_ids]
+        stats.miss_prefetched[j] += len(pre)
+        if stats.miss_prefetched_ps is not None:
+            stats.miss_prefetched_ps[j] += self._ps_count(pre)
+
+    def _finish_split(self, stats: IterStats, protect):
+        stats.miss_demand = stats.miss_pull - stats.miss_prefetched
+        if stats.miss_prefetched_ps is not None:
+            stats.miss_demand_ps = (stats.miss_pull_ps
+                                    - stats.miss_prefetched_ps)
+        self._announced = (protect.uids if isinstance(protect, EvictPlan)
+                           else None)
 
     # -- eviction ------------------------------------------------------------
     def _pick_victims(self, j: int, pinned: np.ndarray, count: int,
@@ -317,13 +404,37 @@ class ClusterCache:
         strictly refines the decision instead of flattening it.  Only
         *latest* resident copies earn the shield — a stale copy of a
         soon-reused id misses on its next use regardless, so keeping it
-        over a cold entry buys nothing."""
+        over a cold entry buys nothing.
+
+        An :class:`EvictPlan` makes the order *exact*: an integer
+        lexicographic sort (no float key-shift arithmetic) that takes
+        no-pending-use candidates first in policy order, then in-window
+        latest copies by descending next use — Belady's rule over the
+        announced horizon, with the policy key only breaking ties the
+        oracle cannot see.  An empty plan falls through to the plain
+        (bitwise-identical) no-protect scan."""
         if len(cand) < count:
             raise RuntimeError(
                 f"worker {j}: cannot evict {count} of {len(cand)} candidates "
                 "(capacity too small for one batch)"
             )
         key = self._evict_key(j, cand)
+        if isinstance(protect, EvictPlan):
+            if protect.n and len(cand):
+                pos = np.minimum(np.searchsorted(protect.uids, cand),
+                                 protect.n - 1)
+                hit = (protect.uids[pos] == cand) & self.latest[j, cand]
+                nxt = np.where(hit, protect.next_use[pos], -1)
+                # stable lexsort; cand is sorted ascending, so residual
+                # ties break by id identically in both engines
+                order = np.lexsort((key, -nxt, hit))
+                victims = cand[order[:count]]
+            else:
+                victims = cand[np.argpartition(key, count - 1)[:count]]
+            if self.policy == "emark":
+                if (self.mark[j, resident] >= self.target[j]).all():
+                    self.target[j] += 1
+            return victims
         p_ids, p_next = (protect if isinstance(protect, tuple)
                          else (protect, None))
         if p_ids is not None and len(p_ids) and len(cand):
@@ -510,7 +621,9 @@ class SparseClusterCache(ClusterCache):
             hits=np.zeros(n, np.int64),
         )
         self._init_ps_stats(stats)
+        self._init_split(stats)
         if U == 0:
+            self._finish_split(stats, protect)
             return stats
 
         latU = self.latest[:, touched]
@@ -549,6 +662,7 @@ class SparseClusterCache(ClusterCache):
             have = self.present[j, ids] & self.latest[j, ids]
             miss_ids = ids[~have]
             stats.miss_pull[j] += len(miss_ids)
+            self._split_miss(j, miss_ids, stats)
             if self.part is not None:
                 stats.miss_pull_ps[j] += self._ps_count(miss_ids)
             resident_stale = miss_ids[self.present[j, miss_ids]]
@@ -573,6 +687,7 @@ class SparseClusterCache(ClusterCache):
         lat = self.latest[:, touched]
         lat &= ~(need_any[None, :] & ~needU)
         self.latest[:, touched] = lat
+        self._finish_split(stats, protect)
         return stats
 
     # -- admission (+ bounded-candidate evictions) ---------------------------

@@ -65,7 +65,7 @@ from .cost import (cost_matrix_jnp, cost_matrix_sparse_jnp,
                    cost_matrix_sparse_ps_jnp)
 
 __all__ = ["EsdState", "esd_init", "esd_cost_matrix", "esd_decide",
-           "esd_dispatch",
+           "esd_dispatch", "esd_reassign", "changed_samples_mask",
            "esd_state_update", "SparseEsdState", "esd_sparse_init",
            "esd_state_update_sparse", "need_ids_list", "need_ids_local",
            "heu_dispatch_jax", "auction_fixed", "hybrid_dispatch_jax",
@@ -101,6 +101,57 @@ def heu_dispatch_jax(C, cap: int, workload=None, order=None):
 
     _, js = jax.lax.scan(body, workload, order)
     return jnp.zeros((k,), jnp.int32).at[order].set(js)
+
+
+def changed_samples_mask(samples, state_a, state_b):
+    """(m,) bool — samples holding >= 1 id whose Alg.-1 state column
+    (``latest`` or ``dirty``) differs between two (Sparse)EsdStates.
+
+    The jit twin of ``repro.pipeline.double_buffer.changed_ids``
+    restricted to one batch: exactly the samples whose stale decide-time
+    cost row can differ from the committed-state truth, i.e. the only
+    rows :func:`esd_reassign` needs to re-place.  PAD (-1) ids never
+    flag a sample.
+    """
+    V = state_a.latest.shape[1]
+    valid = samples >= 0
+    g = jnp.clip(samples, 0, V - 1)
+    diff = ((state_a.latest[:, g] != state_b.latest[:, g])
+            | (state_a.dirty[:, g] != state_b.dirty[:, g])).any(axis=0)
+    return (diff & valid).any(axis=1)
+
+
+def esd_reassign(C, assign, flagged, cap: int):
+    """Repair a stale assignment against a fresh cost matrix.
+
+    Keeps every unflagged sample on its stale worker (its cost row is
+    bitwise what the decide-time state produced, so the stale choice is
+    still exact) and greedily re-places the flagged rows in regret order
+    on their cheapest worker with spare capacity — the same capped scan
+    as :func:`heu_dispatch_jax`, seeded with the unflagged workload.
+
+    C: (k, n) committed-state cost matrix; ``flagged`` from
+    :func:`changed_samples_mask`.  Feasible whenever the stale assignment
+    was (``cap * n >= k``).  Returns ``(assign, n_reassigned)``.
+    """
+    k, n = C.shape
+    assign = assign.astype(jnp.int32)
+    wl = jnp.zeros((n,), jnp.int32).at[assign].add((~flagged).astype(jnp.int32))
+    # flagged rows first, by regret (the scan must see them before the
+    # pass-through rows so capacity fills in regret order)
+    order = jnp.argsort(-jnp.where(flagged, _regret(C), -jnp.inf),
+                        stable=True)
+    pref = jnp.argsort(C, axis=1, stable=True)
+
+    def body(wl, i):
+        row = pref[i]
+        j_new = row[jnp.argmax(wl[row] < cap)]
+        j = jnp.where(flagged[i], j_new, assign[i])
+        return wl.at[j_new].add(flagged[i].astype(jnp.int32)), j
+
+    _, js = jax.lax.scan(body, wl, order)
+    return (jnp.zeros((k,), jnp.int32).at[order].set(js),
+            flagged.sum().astype(jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("capacity", "n_phases", "rounds_per_phase"))
@@ -216,12 +267,19 @@ def esd_init(n_workers: int, vocab: int) -> EsdState:
 
 
 def esd_state_update(state: EsdState, need: jnp.ndarray,
-                     capacity: Optional[int] = None):
+                     capacity: Optional[int] = None, staged=None):
     """One BSP iteration of the cache protocol on the replicated state.
 
     need: (n, V) bool — ids each worker trains this iteration (post-
     dispatch).  Returns (new_state, counts dict with per-worker miss_pull /
     update_push / evict_push).
+
+    ``staged``: optional (V,) bool membership of the prefetch staging
+    plane (``repro.pipeline.prefetch``).  A miss on a staged id is served
+    locally instead of pulling the PS at need time, so the counts gain
+    the ``prefetch_hit`` / ``demand_miss`` split of ``miss_pull``; the
+    state transition itself is unchanged (the pull happened earlier and
+    is priced as prefetch bytes).  ``staged=None`` is the bitwise path.
     """
     latest, dirty = state.latest, state.dirty
     n, V = need.shape
@@ -279,6 +337,10 @@ def esd_state_update(state: EsdState, need: jnp.ndarray,
     new = EsdState(latest, dirty, last_access, step)
     counts = {"miss_pull": miss_pull, "update_push": update_push,
               "evict_push": evict_push}
+    if staged is not None:
+        pre = (miss & staged[None, :]).sum(axis=1)
+        counts["prefetch_hit"] = pre
+        counts["demand_miss"] = miss_pull - pre
     return new, counts
 
 
@@ -328,7 +390,7 @@ def esd_sparse_init(n_workers: int, vocab: int,
 
 def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
                             capacity: Optional[Union[int, Sequence[int]]] = None,
-                            part=None):
+                            part=None, staged=None):
     """Incremental BSP iteration: same protocol and counts as
     :func:`esd_state_update`, driven by touched ids only.
 
@@ -348,6 +410,11 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
     (init the state with the same sequence so the slot buffer carries
     one segment per shard).  A plain int is the unchanged (bitwise)
     single-budget path.
+
+    ``staged``: optional (V,) bool prefetch-plane membership (linear id
+    space) — adds the ``prefetch_hit`` / ``demand_miss`` split of
+    ``miss_pull`` to the counts without touching the state transition;
+    see :func:`esd_state_update`.
     """
     n, L = need_ids.shape
     V = state.latest.shape[1]
@@ -534,6 +601,11 @@ def esd_state_update_sparse(state: SparseEsdState, need_ids: jnp.ndarray,
     new = SparseEsdState(latest, dirty, last_access, slots, step)
     counts = {"miss_pull": miss_pull, "update_push": update_push,
               "evict_push": evict_push}
+    if staged is not None:
+        stagedU = staged[g] & uvalid
+        pre = (miss & stagedU[None, :]).sum(axis=1)
+        counts["prefetch_hit"] = pre
+        counts["demand_miss"] = miss_pull - pre
     if part is not None:
         # per-shard breakdown on the touched universe; sentinel columns
         # never hold a set miss/pusher bit, so their shard is irrelevant

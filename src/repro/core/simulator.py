@@ -17,11 +17,25 @@ synthetic CTR stream and accounts the paper's metrics:
     per bandwidth class (Fig. 5).
 
 Lookahead (``SimConfig.lookahead = W > 0``): the batch stream is wrapped
-in repro.pipeline.window.LookaheadWindow, and the ids the next W batches
-touch become a soft eviction shield (``cache.step(..., protect=)``) —
-window dedup turns into real miss-op reduction exactly as the cache
-engine reports it, no analytic discount.  ``SimResult.pipeline`` carries
-the stage breakdown and the window's dedup accounting.
+in repro.pipeline.window.LookaheadWindow and the window's first/last-use
+oracle becomes an *exact* eviction plan (``cache.step(protect=
+EvictPlan)``): candidates with no pending use in the window evict first
+(policy order), then in-window rows by farthest next use — Belady's rule
+on the W-step horizon, replacing the old soft shield.  Window dedup
+turns into real miss-op reduction exactly as the cache engine reports
+it, no analytic discount.  The engines also split each step's misses
+into *prefetched* (the id was announced in the previous step's plan, so
+a window-driven prefetcher had a full step to pull it early) vs *demand*
+(first seen now — its wire latency is unhideable).  This split is the
+*unbounded-budget* bound on hideability; the training driver
+(``--prefetch B``) reports the budgeted real split its staging plane
+achieves.  ``SimConfig.prefetch
+= True`` prices that split into the timing model: demand pulls stay on
+the training critical path while prefetched pulls move to a prefetch
+stage that overlaps training (per-iteration time becomes
+``max(train_stage, decision, prefetch_pull)`` at depth >= 2).
+``SimResult.pipeline`` carries the stage breakdown, the dedup
+accounting, and the miss split.
 
 Decision time: "calibrated" (default) interpolates the paper's Table 2
 GPU-parallel Hungarian latencies — we are simulating their testbed, and
@@ -73,7 +87,7 @@ from ..exchange.plan import compile_plan
 from ..ps import make_partition
 from .baselines import (FAECache, HETCache, laia_dispatch, random_dispatch,
                         random_dispatch_active)
-from .cache import ClusterCache, IterStats, SparseClusterCache
+from .cache import ClusterCache, EvictPlan, IterStats, SparseClusterCache
 from .cost import (batch_unique_np, cost_from_state_cols,
                    cost_from_state_cols_ps, cost_matrix_np,
                    transmission_time, transmission_time_codec)
@@ -158,6 +172,12 @@ class SimConfig:
     # (repro.pipeline.window); W = 0 keeps the cache bitwise.
     pipeline_depth: int = 2
     lookahead: int = 0
+    # window-driven prefetch timing (needs lookahead > 0): misses whose
+    # ids the previous step's eviction plan announced count as
+    # *prefetched* — their pull overlaps training in a prefetch stage —
+    # while first-seen (demand) misses stay on the critical path.  False
+    # keeps the timing model bitwise (the miss split is still reported).
+    prefetch: bool = False
     # fault injection (repro.elastic.FaultPlan): scripted/stochastic worker
     # crash/rejoin, straggler slowdown, bandwidth droop, PS-shard outage.
     # None (default) is the unchanged static-cluster path; an *empty* plan
@@ -336,6 +356,12 @@ def simulate(cfg: SimConfig) -> SimResult:
     if cfg.pipeline_depth < 1:
         raise ValueError(f"pipeline_depth must be >= 1, got "
                          f"{cfg.pipeline_depth}")
+    if cfg.prefetch and cfg.lookahead <= 0:
+        raise ValueError("prefetch timing needs lookahead > 0 (the window "
+                         "plan is what announces future misses)")
+    if cfg.prefetch and cfg.faults is not None:
+        raise ValueError("prefetch timing under a fault plan is not "
+                         "modeled")
     cache = _make_cache(cfg, hot_ids, vocab=vocab, part=part)
 
     faults = cfg.faults
@@ -365,6 +391,8 @@ def simulate(cfg: SimConfig) -> SimResult:
 
     per_iter_cost, per_iter_time, dec_times, alg1_costs = [], [], [], []
     train_stage_times, dedup_saved, dedup_touches = [], 0, 0
+    pre_total = dem_total = 0
+    split_seen = False
     exch_acc = ({"mode": cfg.exchange, "payload_bytes": 0, "wire_bytes": 0,
                  "padded_wire_bytes": 0, "times": []}
                 if cfg.exchange is not None else None)
@@ -390,14 +418,12 @@ def simulate(cfg: SimConfig) -> SimResult:
         protect = None
         if cfg.lookahead > 0:
             (samples, _, _), wmeta = next(stream)
-            # soft eviction shield: every id the next W batches touch,
-            # graded by how soon (Belady-style; cache._select_victims)
-            p_ids, p_next = wmeta.uids, wmeta.first_use
+            # exact eviction plan from the window oracle: no-pending-use
+            # candidates evict first, then in-window rows by farthest
+            # next use (Belady on the W-step horizon)
+            protect = EvictPlan.from_window(wmeta)
             if use_ps:
-                p_ids = part.to_linear(p_ids)
-                order = np.argsort(p_ids)     # hashed layouts unsort
-                p_ids, p_next = p_ids[order], p_next[order]
-            protect = (p_ids, p_next)
+                protect = protect.linearize(part)  # hashed layouts unsort
             if it >= cfg.warmup:
                 dedup_saved += wmeta.dedup_saved
                 dedup_touches += wmeta.total_touches
@@ -510,6 +536,21 @@ def simulate(cfg: SimConfig) -> SimResult:
             cost = stats.cost(t_it)
             comm = stats.per_worker_cost(t_it)
 
+        # prefetch timing: announced-miss pulls ran in a prefetch stage
+        # overlapped with the previous train step, so only demand misses
+        # keep their wire time on the training critical path (total cost
+        # is unchanged — the bytes still move, just earlier)
+        pre_t = 0.0
+        if cfg.prefetch and stats.miss_prefetched is not None:
+            if use_ps:
+                pre_ops = np.asarray(stats.miss_prefetched_ps, np.float64)
+                pre_t = float((pre_ops * tps_it).max(axis=1).max())
+                comm = ((stats._ops_ps() - pre_ops) * tps_it).max(axis=1)
+            else:
+                pre = np.asarray(stats.miss_prefetched, np.float64)
+                pre_t = float((pre * t_it).max())
+                comm = comm - pre * t_it
+
         # sample-exchange time from the compiled plan's byte accounting:
         # ragged ships the bucketed schedule, padded one uniform block.
         # Each (src, dst) link is priced at min(bw_src, bw_dst) — a
@@ -555,9 +596,9 @@ def simulate(cfg: SimConfig) -> SimResult:
             train_stage = (float(np.where(cs.active, per_w, 0.0).max())
                            + exch_t + handoff_t)
         if cfg.pipeline_depth >= 2:
-            iter_time = max(train_stage, dec_t)
+            iter_time = max(train_stage, dec_t, pre_t)
         else:
-            iter_time = train_stage + dec_t
+            iter_time = train_stage + dec_t + pre_t
 
         if it >= cfg.warmup:
             per_iter_cost.append(cost)
@@ -568,6 +609,12 @@ def simulate(cfg: SimConfig) -> SimResult:
                 alg1_costs.append(alg1)
             hits += int(stats.hits.sum())
             lookups += int(stats.lookups.sum())
+            if stats.miss_prefetched is not None:
+                # baseline caches (HET/FAE) build their own IterStats and
+                # report no split — guard, don't fake zeros
+                split_seen = True
+                pre_total += int(stats.miss_prefetched.sum())
+                dem_total += int(stats.miss_demand.sum())
             for cls, mask in (("5Gbps", fast), ("0.5Gbps", ~fast)):
                 ingredient[cls]["miss_pull"] += int(stats.miss_pull[mask].sum())
                 ingredient[cls]["update_push"] += int(stats.update_push[mask].sum())
@@ -628,7 +675,13 @@ def simulate(cfg: SimConfig) -> SimResult:
                                    for c in ingredient)),
         "dedup_saved_ops": int(dedup_saved),
         "dedup_total_touches": int(dedup_touches),
+        "prefetch": bool(cfg.prefetch),
     }
+    if split_seen:
+        pipeline["miss_prefetched_total"] = pre_total
+        pipeline["miss_demand_total"] = dem_total
+        pipeline["prefetch_hit_rate"] = pre_total / max(pre_total + dem_total,
+                                                        1)
     return SimResult(
         cost=float(per_iter_cost.sum()),
         itps=float(len(per_iter_time) / per_iter_time.sum()),

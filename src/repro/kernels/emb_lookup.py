@@ -22,6 +22,12 @@ TPU adaptation of the CUDA gather — two variants:
 
 Weights multiply each row (0.0 for PAD ids — the wrapper clamps PAD to row
 0 and zeroes its weight).
+
+:func:`staged_gather` is the window-driven prefetch companion
+(repro.pipeline.prefetch): one pass over the staging plane that pulls
+each freshly selected slot's row straight from the table and carries
+every other slot through — the async pull and the merge into the cache
+plane fused into a single kernel, no host round-trip.
 """
 from __future__ import annotations
 
@@ -154,6 +160,68 @@ def pooled_lookup(
         out_shape=jax.ShapeDtypeStruct((B, Ep), jnp.float32),
         interpret=interpret,
     )(ids_c, w, tbl)
+    return out[:, :E]
+
+
+def _kernel_staged(src_ref, plane_ref, table_ref, out_ref):
+    s = pl.program_id(0)
+    take = src_ref[s] >= 0
+    out_ref[...] = jnp.where(take, table_ref[...], plane_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_e", "interpret"))
+def staged_gather(
+    plane_rows: jnp.ndarray,
+    table: jnp.ndarray,
+    src_rows: jnp.ndarray,
+    *,
+    block_e: int = DEFAULT_BLOCK_E,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """out[s] = table[src_rows[s]] if src_rows[s] >= 0 else plane_rows[s].
+
+    The window-driven prefetch pull: ``src_rows`` (C,) names, per staging
+    slot, the table row to pull (-1 = keep the slot's current row).  The
+    grid walks every slot once — ``src_rows`` streams in through scalar
+    prefetch and the table BlockSpec ``index_map`` DMAs the selected row
+    for each step, so freshly staged slots read straight from the
+    (HBM-resident) table while untouched slots copy through.  Pull and
+    merge into the cache plane are one kernel launch: no host round-trip,
+    no scatter on the host side.
+
+    plane_rows: (C, E) staging plane; table: (V, E); src_rows: (C,) int32
+    (values < 0 clamp to row 0 for the DMA and are discarded by the
+    select).  Returns the merged (C, E) plane.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    C, E = plane_rows.shape
+    src = jnp.asarray(src_rows).astype(jnp.int32)
+
+    pad_e = (-E) % block_e
+    pln = jnp.pad(plane_rows, ((0, 0), (0, pad_e))) if pad_e else plane_rows
+    tbl = jnp.pad(table, ((0, 0), (0, pad_e))) if pad_e else table
+    Ep = E + pad_e
+    n_e = Ep // block_e
+
+    out = pl.pallas_call(
+        _kernel_staged,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(C, n_e),
+            in_specs=[
+                pl.BlockSpec((1, block_e),
+                             lambda s, e, src_: (s, e)),
+                pl.BlockSpec((1, block_e),
+                             lambda s, e, src_: (jnp.maximum(src_[s], 0), e)),
+            ],
+            out_specs=pl.BlockSpec((1, block_e),
+                                   lambda s, e, src_: (s, e)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((C, Ep), plane_rows.dtype),
+        interpret=interpret,
+    )(src, pln, tbl)
     return out[:, :E]
 
 

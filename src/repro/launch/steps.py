@@ -235,7 +235,10 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
         return s2, d2, l2, need, overflow
 
     @jax.jit
-    def advance(esd_state, sparse, dense, labels, assign):
+    def advance(esd_state, sparse, dense, labels, assign, staged=None):
+        # staged: optional (V,) bool prefetch-plane membership — splits
+        # the step's miss count into prefetch hits vs demand misses
+        # (pure accounting; None leaves the update bitwise unchanged)
         s2, d2, l2, need, overflow = shard_map(
             advance_shard, mesh=mesh,
             in_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),
@@ -244,9 +247,11 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
             check_rep=False)(sparse, dense, labels, assign)
         if sparse_esd:
             new_state, counts = esd_state_update_sparse(esd_state, need,
-                                                        capacity, part)
+                                                        capacity, part,
+                                                        staged=staged)
         else:
-            new_state, counts = esd_state_update(esd_state, need, capacity)
+            new_state, counts = esd_state_update(esd_state, need, capacity,
+                                                 staged=staged)
         counts = dict(counts)
         counts["exchange_overflow"] = overflow
         return (s2, d2, l2), new_state, counts
@@ -326,6 +331,51 @@ def make_dlrm_esd_stages(mesh, n: int, m: int, V_space: int, t_tran,
             check_rep=False)(sparse, assign)
 
     return decide_e, advance_e, realized_cost_e, out_rows
+
+
+def make_dlrm_repair_stage(mesh, n: int, m: int, t_tran, *, part=None,
+                           cap_slack: float = 0.0, use_pallas: bool = False):
+    """Jitted commit-time repair for the decide-ahead chain
+    (``PipelinedRunner(repair_fn=...)``):
+
+      repair(committed_state, decide_state, sparse, assign)
+          -> (assign', n_reassigned)
+
+    Flags exactly the samples whose ids' state columns (``latest`` /
+    ``dirty`` — the planes the Alg.-1 cost reads) changed between the
+    decide-time state and the committed one, and re-places only those
+    via the capacity-capped greedy (``esd_reassign``) against the
+    committed-state cost matrix.  Unflagged samples keep their stale
+    assignment, which is still exact: their cost columns are untouched,
+    so the original argmin stands.  Much cheaper than a full re-decide
+    and runs at commit, off the decide stream.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..core.dispatch_tpu import (changed_samples_mask, dispatch_cap,
+                                     esd_cost_matrix, esd_reassign)
+
+    axis = "data"
+
+    def repair_shard(committed, decided, s, a):
+        if part is not None:
+            s = part.to_linear(s)
+        flagged = changed_samples_mask(s, decided, committed)
+        C = esd_cost_matrix(s, committed, t_tran, use_pallas=use_pallas,
+                            part=part)
+        cap = dispatch_cap(s.shape[0], n, cap_slack)
+        a2, n_re = esd_reassign(C, a, flagged, cap)
+        return a2, jax.lax.psum(n_re, axis)
+
+    @jax.jit
+    def repair(committed_state, decide_state, sparse, assign):
+        return shard_map(
+            lambda s, a: repair_shard(committed_state, decide_state, s, a),
+            mesh=mesh, in_specs=(P(axis, None), P(axis)),
+            out_specs=(P(axis), P()), check_rep=False)(sparse, assign)
+
+    return repair
 
 
 # --------------------------------------------------------------------------

@@ -13,8 +13,15 @@ Two modes:
     variant (decides on the t-1 cache state, re-scores on commit).
     ``--cap-slack`` (with ``--exchange ragged``) relaxes the per-worker
     dispatch capacity; workers then train uneven PAD-masked batches.
-    Logs per-step transmission counts/cost from the in-jit cache state
-    machine.
+    ``--decide-ahead A`` buffers up to A+1 decisions on progressively
+    stale states (chained staleness bound) with a commit-time repair
+    that re-places only the samples whose ids changed state, and
+    ``--prefetch B`` (with ``--lookahead``) stages up to B future-miss
+    rows per step into the window-driven staging plane while training
+    runs — per-step metrics then split misses into prefetch hits vs
+    demand (``prefetch_bytes`` / ``demand_miss_bytes`` /
+    ``prefetch_hit_rate``).  Logs per-step transmission counts/cost
+    from the in-jit cache state machine.
   * LM (any assigned arch, reduced or full): standard data+tensor parallel
     next-token training on a synthetic Zipf token stream.
 
@@ -27,6 +34,7 @@ Examples (CPU, reduced configs):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from functools import partial
@@ -46,13 +54,14 @@ from ..data.loader import PrefetchLoader
 from ..data.synthetic import WORKLOADS, token_stream
 from ..dist.sharding import param_specs, to_shardings
 from ..elastic import FaultPlan, cost_column_bias, effective_t
-from ..pipeline import LookaheadWindow, PipelinedRunner
-from .steps import make_dlrm_esd_stages
+from ..pipeline import (LookaheadWindow, PipelinedRunner, prefetch_candidates,
+                        prefetch_init, prefetch_step, staged_membership)
+from .steps import make_dlrm_esd_stages, make_dlrm_repair_stage
 from ..models import api, dlrm
 from ..optim import get_optimizer
 from ..ps import make_partition
 from ..quant.codecs import (get_codec, quantize_with_feedback,
-                            resolve_link_codecs, ste)
+                            resolve_link_codecs, row_wire_bytes, ste)
 from ..core.cost import transmission_time_codec
 from .steps import raise_on_overflow
 
@@ -84,6 +93,35 @@ def run_dlrm(args):
         raise SystemExit("--pipeline-depth > 1 / --stale-decide need ESD "
                          "(--esd-alpha): without dispatch there is no "
                          "decision stage to pipeline")
+    if args.decide_ahead:
+        if not use_esd:
+            raise SystemExit("--decide-ahead needs ESD (--esd-alpha): the "
+                             "chain buffers dispatch decisions")
+        if args.stale_decide:
+            raise SystemExit("--decide-ahead subsumes --stale-decide (the "
+                             "chain decides on progressively stale states "
+                             "already); pick one")
+        if args.fault_plan:
+            raise SystemExit("--decide-ahead with --fault-plan is not wired "
+                             "(the elastic stages feed per-step fault arrays "
+                             "to an in-order decide stream)")
+    use_prefetch = args.prefetch > 0
+    if use_prefetch:
+        if not use_esd:
+            raise SystemExit("--prefetch needs ESD (--esd-alpha): the split "
+                             "miss accounting lives in the cache update)")
+        if args.lookahead <= 0:
+            raise SystemExit("--prefetch needs --lookahead > 0 (the window "
+                             "meta is what names the future misses)")
+        if args.n_ps > 1:
+            raise SystemExit("--prefetch with --n-ps > 1 is not wired (the "
+                             "staging plane gathers from the unstacked "
+                             "table)")
+        if args.fault_plan:
+            raise SystemExit("--prefetch with --fault-plan is not wired")
+        if args.prefetch_slots < args.prefetch:
+            raise SystemExit("--prefetch-slots must be >= --prefetch (one "
+                             "step's pulls must fit the plane)")
     plan = None
     if args.fault_plan:
         if not use_esd:
@@ -243,7 +281,7 @@ def run_dlrm(args):
     last_t = time.perf_counter()
     esd_seen = {}   # step -> post-advance dispatch state, for checkpoints
 
-    def record(i, loss, counts, meta, info):
+    def record(i, loss, counts, meta, info, pulled=None):
         nonlocal last_t
         now = time.perf_counter()
         rec = {"step": i, "loss": float(loss),
@@ -265,11 +303,27 @@ def run_dlrm(args):
                 rec["cost"] = float(sum((ops[o] * np.asarray(t_total)).sum()
                                         for o in ops))
             rec.update({op: int(v.sum()) for op, v in ops.items()})
+            # miss-traffic split: with the staging plane active, a miss
+            # whose row was already staged left the critical path — only
+            # demand misses pay wire latency at train time (prefetch off:
+            # every miss is a demand miss, prefetch_bytes 0)
+            wire = row_wire_bytes(cfg.embedding_dim, codec)
+            hit = (int(np.asarray(counts["prefetch_hit"]).sum())
+                   if "prefetch_hit" in counts else 0)
+            demand = (int(np.asarray(counts["demand_miss"]).sum())
+                      if "demand_miss" in counts
+                      else int(ops["miss_pull"].sum()))
+            rec["prefetch_bytes"] = (int(np.asarray(pulled)) * wire
+                                     if pulled is not None else 0)
+            rec["demand_miss_bytes"] = demand * wire
+            rec["prefetch_hit_rate"] = round(hit / max(hit + demand, 1), 4)
         if meta is not None:
             rec["window_dedup_frac"] = round(meta.dedup_frac, 4)
         for key in ("alg1_est", "alg1_realized"):
             if key in info:
                 rec[key] = float(info[key])
+        if "n_reassigned" in info:
+            rec["n_reassigned"] = int(np.asarray(info["n_reassigned"]))
         if plan is not None:
             rec["n_active"] = plan.state_at(i).n_active
         metrics.append(rec)
@@ -320,19 +374,67 @@ def run_dlrm(args):
 
     adv_step = count(start)
     if plan is None:
+        pf_plane = (prefetch_init(args.prefetch_slots, cfg.embedding_dim)
+                    if use_prefetch else None)
+        pf_cands = max(8 * args.prefetch, 256)
+        dec_step = count(start)
+
+        @jax.jit
+        def with_staged(state, memb):
+            # price the staging plane into Alg. 1: a staged row pulls for
+            # free, so the dispatch objective sees it as a cluster-resident
+            # latest copy (decision-side view only — the committed cache
+            # state never includes it)
+            return dataclasses.replace(
+                state, latest=state.latest | memb[None, :])
+
         def decide_fn(state, batch):
+            i = next(dec_step)
+            if use_prefetch:
+                state = with_staged(
+                    state, staged_membership(pf_plane, V_space, i))
             return decide_jit(state, batch[0][0])
 
         def advance_fn(state, batch, assign):
+            nonlocal pf_plane
             (s, d, l), meta = batch
-            x, new_state, counts = advance_jit(state, s, d, l, assign)
-            esd_seen[next(adv_step)] = new_state
-            return x, new_state, {"counts": counts, "meta": meta}
+            i = next(adv_step)
+            aux = {}
+            if use_prefetch:
+                # split this step's misses against the plane as staged by
+                # steps < i, then pull rows for the window's future
+                # misses — the pull overlaps step i's training (async
+                # dispatch), which is what moves it off the critical path
+                memb = staged_membership(pf_plane, V_space, i)
+                x, new_state, counts = advance_jit(state, s, d, l, assign,
+                                                   memb)
+                cids, cexp = prefetch_candidates(meta, i, pf_cands)
+                resident = new_state.latest.any(axis=0)
+                pf_plane, n_pulled = prefetch_step(
+                    pf_plane, params["embed"], resident,
+                    jnp.asarray(cids), jnp.asarray(cexp), i,
+                    budget=args.prefetch, codec=args.codec)
+                aux["prefetch_pulled"] = n_pulled
+            else:
+                x, new_state, counts = advance_jit(state, s, d, l, assign)
+            esd_seen[i] = new_state
+            aux.update({"counts": counts, "meta": meta})
+            return x, new_state, aux
 
         realized_fn = None
-        if args.stale_decide:
+        if args.stale_decide or args.decide_ahead:
             realized_fn = lambda state, batch, assign: realized_jit(
                 state, batch[0][0], assign)
+        repair_fn = None
+        if args.decide_ahead:
+            repair_jit = make_dlrm_repair_stage(mesh, n, m, t_tran,
+                                                part=part,
+                                                cap_slack=args.cap_slack)
+
+            def repair_fn(committed, decided, batch, assign):
+                a2, n_re = repair_jit(committed, decided, batch[0][0],
+                                      assign)
+                return a2, {"n_reassigned": n_re}
     else:
         # fold the plan into the per-step stage arrays: effective link
         # times (bandwidth droop / PS outage), cost-column bias
@@ -366,6 +468,7 @@ def run_dlrm(args):
             return x, new_state, {"counts": counts, "meta": meta}
 
         realized_fn = None
+        repair_fn = None
         if args.stale_decide:
             def realized_fn(state, batch, assign):
                 t_arr, bias, act = fault_arrays(next(rea_step))
@@ -384,10 +487,12 @@ def run_dlrm(args):
     runner = PipelinedRunner(
         decide_fn, advance_fn, train_fn, esd,
         depth=args.pipeline_depth, stale=args.stale_decide,
-        realized_cost_fn=realized_fn)
+        realized_cost_fn=realized_fn, decide_ahead=args.decide_ahead,
+        repair_fn=repair_fn)
     runner.run(device_batches(), steps=args.steps - start,
                record_fn=lambda t, loss, aux, info: record(
-                   start + t, loss, aux["counts"], aux["meta"], info))
+                   start + t, loss, aux["counts"], aux["meta"], info,
+                   aux.get("prefetch_pulled")))
     return metrics
 
 
@@ -486,6 +591,24 @@ def build_parser():
                     help="W-batch dedup window over the input stream "
                          "(repro.pipeline.window); logs per-step "
                          "window_dedup_frac")
+    ap.add_argument("--decide-ahead", type=int, default=0,
+                    help="buffer up to this many + 1 dispatch decisions, "
+                         "each made on the newest committed state at its "
+                         "decide time (progressively stale; bounded by the "
+                         "chained staleness bound) — sustains pipeline "
+                         "depth > 2; a commit-time repair re-places only "
+                         "the samples whose ids changed state "
+                         "(n_reassigned), and alg1_realized re-scores on "
+                         "the committed state")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="stage up to this many future-miss rows per step "
+                         "from the PS tier into the window-driven staging "
+                         "plane (needs --lookahead > 0); misses then split "
+                         "into prefetch hits (wire cost hidden under "
+                         "training) vs demand misses in the per-step "
+                         "metrics (0 = off, bitwise-identical path)")
+    ap.add_argument("--prefetch-slots", type=int, default=512,
+                    help="staging-plane capacity in rows")
     ap.add_argument("--stale-decide", action="store_true",
                     help="decide on the t-1 cache state (double-buffered) "
                          "so the decision overlaps even the cache update; "

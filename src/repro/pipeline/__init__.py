@@ -23,15 +23,27 @@ sentence into runnable structure, in three layers:
     ahead of training; with jax async dispatch the host enqueues the
     chain for step t+1 while the device executes step t's
     forward/backward.  ``depth=1`` is the synchronous loop and is
-    bitwise-identical to running the stages back to back.
+    bitwise-identical to running the stages back to back.  The
+    *decide-ahead chain* (``decide_ahead=A``) buffers up to A+1
+    decisions on progressively stale states (bounded by
+    ``staleness_bound_chain``) so the decide stream sustains depth > 2.
+  * :mod:`repro.pipeline.prefetch` — the window-driven pull plane: rows
+    the window says future steps will miss are staged from the PS tier
+    while the current step trains (a fused Pallas gather-merge), so
+    those misses leave the critical path; misses split into
+    prefetch-hits vs demand per step.
 """
 from .double_buffer import (DoubleBuffer, changed_ids, db_commit, db_init,
-                            staleness_bound)
+                            staleness_bound, staleness_bound_chain)
+from .prefetch import (PrefetchPlane, prefetch_candidates, prefetch_init,
+                       prefetch_step, staged_membership)
 from .runner import PipelinedRunner
 from .window import LookaheadWindow, WindowMeta, window_meta
 
 __all__ = [
     "DoubleBuffer", "db_init", "db_commit", "changed_ids",
-    "staleness_bound", "PipelinedRunner", "LookaheadWindow", "WindowMeta",
-    "window_meta",
+    "staleness_bound", "staleness_bound_chain", "PipelinedRunner",
+    "LookaheadWindow", "WindowMeta", "window_meta", "PrefetchPlane",
+    "prefetch_init", "prefetch_candidates", "prefetch_step",
+    "staged_membership",
 ]

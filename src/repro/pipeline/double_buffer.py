@@ -41,7 +41,7 @@ import numpy as np
 from ..core.cost import dedup_mask_np
 
 __all__ = ["DoubleBuffer", "db_init", "db_commit", "changed_ids",
-           "staleness_bound"]
+           "staleness_bound", "staleness_bound_chain"]
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -114,3 +114,30 @@ def staleness_bound(samples: np.ndarray, changed: np.ndarray,
     per_shard = t_tran.sum(axis=0)                        # (n_ps,)
     swing = per_shard[part.shard_of_linear(ids)]          # (k, F)
     return (swing * in_changed).sum(axis=1)
+
+
+def staleness_bound_chain(samples: np.ndarray, changed_seq,
+                          t_tran: np.ndarray, part=None) -> np.ndarray:
+    """(k,) per-sample bound on the cost error of a decide-ahead chain.
+
+    A decision issued A steps ahead reads a state that A intervening
+    commits have since mutated.  Writing the decide-time and commit-time
+    states as the endpoints of the chain S_0 -> S_1 -> ... -> S_A, the
+    triangle inequality over per-commit errors gives
+
+        |C_stale[i, j] - C_true[i, j]|
+            <= sum_a staleness_bound(samples, changed(S_a, S_{a+1}))
+
+    ``changed_seq`` is that sequence of per-commit changed-id sets
+    (oldest first, e.g. ``[changed_ids(s0, s1), changed_ids(s1, s2)]``).
+    An empty sequence (decide on the committed state) bounds the error
+    by zero.  The per-step bounds are *not* merged into one changed set:
+    an id flipped by two different commits can contribute its swing
+    twice, and the sum accounts for that correctly where a union would
+    under-count.
+    """
+    samples = np.asarray(samples)
+    total = np.zeros(len(samples), np.float64)
+    for changed in changed_seq:
+        total += staleness_bound(samples, changed, t_tran, part=part)
+    return total

@@ -33,6 +33,21 @@ correction — it re-scores the chosen assignment against the committed
 state via ``realized_cost_fn`` and records both numbers, so consumers
 always account cost at the realized value, never the stale estimate.
 
+``decide_ahead=A`` (A >= 1) generalizes the stale mode into a
+*decide-ahead chain*: the runner keeps up to ``A + 1`` decisions
+buffered, so the assignment for step t+a (a <= A) is computed on the
+state committed a steps earlier — progressively stale along the chain,
+which is what lets the decision stream stay ahead of training at
+``depth > 2`` where the one-slot stale mode would re-serialize.  The
+per-sample decision error is bounded by the *chained* staleness bound
+(``double_buffer.staleness_bound_chain``: one term per intervening
+commit).  On commit the runner first hands the stale assignment to
+``repair_fn`` (if given), which re-assigns exactly the samples whose
+ids' state columns changed since decide time — cheaper than a full
+re-decide, and together with ``realized_cost_fn`` it keeps accounting
+at committed-state truth.  ``decide_ahead=0`` is the unchanged
+(bitwise) PR 5 path.
+
 Stage contracts (all device-array friendly):
   * ``decide_fn(esd_state, batch) -> (assign, alg1_est | None)`` —
     ``alg1_est`` is the Alg.-1 objective of the chosen assignment under
@@ -43,7 +58,11 @@ Stage contracts (all device-array friendly):
   * ``train_fn(train_input) -> loss`` — owns the parameter/optimizer
     state (closure); returns the scalar loss.
   * ``realized_cost_fn(state, batch, assign) -> scalar`` (optional) —
-    the commit-time re-score used by the stale mode.
+    the commit-time re-score used by the stale/decide-ahead modes.
+  * ``repair_fn(committed_state, decide_state, batch, assign) ->
+    (assign, info_dict)`` (optional, decide-ahead mode) — re-assigns the
+    samples whose ids changed state between the two states; its info
+    entries (e.g. ``n_reassigned``) merge into the step's record info.
 """
 from __future__ import annotations
 
@@ -59,13 +78,24 @@ class PipelinedRunner:
     def __init__(self, decide_fn: Callable, advance_fn: Callable,
                  train_fn: Callable, esd_state: Any, depth: int = 1,
                  stale: bool = False,
-                 realized_cost_fn: Optional[Callable] = None):
+                 realized_cost_fn: Optional[Callable] = None,
+                 decide_ahead: int = 0,
+                 repair_fn: Optional[Callable] = None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         if stale and depth < 2:
             raise ValueError("stale decisions only make sense pipelined "
                              "(depth >= 2): at depth 1 the committed state "
                              "is always available")
+        if decide_ahead < 0:
+            raise ValueError(f"decide_ahead must be >= 0, got {decide_ahead}")
+        if decide_ahead and stale:
+            raise ValueError("decide_ahead subsumes stale (the chain decides "
+                             "on progressively stale states already); pick "
+                             "one")
+        if repair_fn is not None and not decide_ahead:
+            raise ValueError("repair_fn only applies to decide-ahead chains "
+                             "(decide_ahead >= 1)")
         self.decide_fn = decide_fn
         self.advance_fn = advance_fn
         self.train_fn = train_fn
@@ -73,6 +103,8 @@ class PipelinedRunner:
         self.depth = depth
         self.stale = stale
         self.realized_cost_fn = realized_cost_fn
+        self.decide_ahead = decide_ahead
+        self.repair_fn = repair_fn
 
     def run(self, batches: Iterable[Any], steps: Optional[int] = None,
             record_fn: Optional[Callable] = None) -> list:
@@ -85,6 +117,8 @@ class PipelinedRunner:
         decide stage tracks it, plus ``alg1_realized`` (the commit-time
         correction) in stale mode.
         """
+        if self.decide_ahead:
+            return self._run_ahead(batches, steps, record_fn)
         it = iter(batches)
         pending: deque = deque()
         records = []
@@ -118,6 +152,60 @@ class PipelinedRunner:
             state = new_state
             pending.append((t, train_input, aux, info))
             # keep at most depth-1 advanced steps in flight ahead of train
+            while len(pending) >= self.depth:
+                records.append(self._drain_one(pending, record_fn))
+            t += 1
+        while pending:
+            records.append(self._drain_one(pending, record_fn))
+        self.esd_state = state
+        return records
+
+    def _run_ahead(self, batches: Iterable[Any], steps: Optional[int],
+                   record_fn: Optional[Callable]) -> list:
+        """Decide-ahead chain: keep up to ``decide_ahead + 1`` decisions
+        buffered, each made on the newest state committed at its decide
+        time — so the decision for step t+a is a commits stale, and the
+        decide stream never blocks on the advance chain."""
+        it = iter(batches)
+        ahead = self.decide_ahead
+        pending: deque = deque()
+        decided: deque = deque()   # (batch, assign, alg1_est, decide_state)
+        records = []
+        state = self.esd_state
+        exhausted = False
+        pulled = 0
+        t = 0
+        while steps is None or t < steps:
+            while (len(decided) <= ahead and not exhausted
+                   and (steps is None or pulled < steps)):
+                try:
+                    batch = next(it)
+                except StopIteration:
+                    exhausted = True
+                    break
+                assign, alg1_est = self.decide_fn(state, batch)
+                decided.append((batch, assign, alg1_est, state))
+                pulled += 1
+            if not decided:
+                break
+            batch, assign, alg1_est, decide_state = decided.popleft()
+            info = {}
+            if alg1_est is not None:
+                info["alg1_est"] = alg1_est
+            if self.repair_fn is not None:
+                # re-assign only the samples whose ids changed state
+                # between decide time and now; everything else keeps its
+                # (still-exact) stale assignment
+                assign, repair_info = self.repair_fn(state, decide_state,
+                                                     batch, assign)
+                info.update(repair_info)
+            if self.realized_cost_fn is not None:
+                info["alg1_realized"] = self.realized_cost_fn(state, batch,
+                                                              assign)
+            train_input, new_state, aux = self.advance_fn(state, batch,
+                                                          assign)
+            state = new_state
+            pending.append((t, train_input, aux, info))
             while len(pending) >= self.depth:
                 records.append(self._drain_one(pending, record_fn))
             t += 1

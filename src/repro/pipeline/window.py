@@ -25,6 +25,14 @@ iterator, buffers ``window`` batches ahead, and yields
 trainer has in hand *before* it commits iteration t, which is what lets
 a cache shield soon-to-be-reused ids from eviction (see
 ``repro.core.cache`` ``protect=``) and a dispatcher decide ahead.
+
+The streaming slide is *incremental*: instead of re-deriving the merge
+(concat + sort + dedup over all W batches, O(total touches) per step)
+the window keeps sorted uid / first-use / last-use / touch planes and
+updates only the positions touched by the one leaving and the one
+entering batch — O(batch unique + U memmove) per step.  The brute-force
+:func:`window_meta` stays as the oracle the incremental path is pinned
+against in tests.
 """
 from __future__ import annotations
 
@@ -130,6 +138,84 @@ class LookaheadWindow:
         self._key = key if key is not None else (lambda item: item)
         self._buf: deque = deque()
         self._exhausted = False
+        # incremental merge state, invariant: describes exactly the
+        # batches currently in self._buf
+        self._abs = 0                       # absolute index of next batch
+        self._occ: dict = {}                # id -> deque of absolute indices
+        self._uids = np.zeros(0, np.int64)  # sorted ids in the window
+        self._first = np.zeros(0, np.int64)  # absolute first-use per uid
+        self._last = np.zeros(0, np.int64)   # absolute last-use per uid
+        self._touch = np.zeros(0, np.int64)  # touching batches per uid
+        self._total = 0                      # sum of per-batch unique counts
+
+    def _add_batch(self, uniq: np.ndarray, a: int):
+        """O(|uniq| + U memmove) slide-in of one batch at absolute index a."""
+        u = uniq.astype(np.int64, copy=False)
+        for i in u.tolist():
+            d = self._occ.get(i)
+            if d is None:
+                self._occ[i] = deque((a,))
+            else:
+                d.append(a)
+        self._total += len(u)
+        if not len(u):
+            return
+        pos = np.searchsorted(self._uids, u)
+        exists = np.zeros(len(u), bool)
+        inb = pos < len(self._uids)
+        exists[inb] = self._uids[pos[inb]] == u[inb]
+        ep = pos[exists]
+        self._touch[ep] += 1
+        self._last[ep] = a
+        if not exists.all():
+            np_ = pos[~exists]
+            nu = u[~exists]
+            self._uids = np.insert(self._uids, np_, nu)
+            self._first = np.insert(self._first, np_, a)
+            self._last = np.insert(self._last, np_, a)
+            self._touch = np.insert(self._touch, np_, 1)
+
+    def _remove_batch(self, uniq: np.ndarray):
+        """Slide the (oldest) head batch out of the merge state."""
+        u = uniq.astype(np.int64, copy=False)
+        self._total -= len(u)
+        survivors = []
+        for i in u.tolist():
+            d = self._occ[i]
+            d.popleft()
+            if d:
+                survivors.append((i, d[0]))
+            else:
+                del self._occ[i]
+        if not len(u):
+            return
+        pos = np.searchsorted(self._uids, u)
+        self._touch[pos] -= 1
+        dead = self._touch[pos] == 0
+        # the head batch is each of its ids' first use, so survivors'
+        # first-use advances to their next buffered occurrence
+        if survivors:
+            sids = np.fromiter((s[0] for s in survivors), np.int64,
+                               len(survivors))
+            snext = np.fromiter((s[1] for s in survivors), np.int64,
+                                len(survivors))
+            self._first[np.searchsorted(self._uids, sids)] = snext
+        if dead.any():
+            dp = pos[dead]
+            self._uids = np.delete(self._uids, dp)
+            self._first = np.delete(self._first, dp)
+            self._last = np.delete(self._last, dp)
+            self._touch = np.delete(self._touch, dp)
+
+    def _meta(self) -> WindowMeta:
+        """Materialize :class:`WindowMeta` from the incremental planes
+        (copies: the planes mutate in place on the next slide)."""
+        base = self._buf[0][2] if self._buf else 0
+        return WindowMeta(window=len(self._buf), uids=self._uids.copy(),
+                          first_use=self._first - base,
+                          last_use=self._last - base,
+                          touches=self._touch.copy(),
+                          total_touches=int(self._total))
 
     def _fill(self, upto: int):
         while len(self._buf) < upto and not self._exhausted:
@@ -139,8 +225,11 @@ class LookaheadWindow:
                 self._exhausted = True
                 return
             # cache the unique set for the W steps the item stays
-            # buffered; only the merge reruns per step
-            self._buf.append((item, _batch_unique(self._key(item))))
+            # buffered; only the touched positions update per step
+            uniq = _batch_unique(self._key(item))
+            self._buf.append((item, uniq, self._abs))
+            self._add_batch(uniq, self._abs)
+            self._abs += 1
 
     def __iter__(self):
         return self
@@ -149,7 +238,7 @@ class LookaheadWindow:
         self._fill(1)
         if not self._buf:
             raise StopIteration
-        item, _ = self._buf.popleft()
+        item, uniq, _ = self._buf.popleft()
+        self._remove_batch(uniq)
         self._fill(self.window)
-        meta = _meta_from_unique([u for _, u in self._buf])
-        return item, meta
+        return item, self._meta()

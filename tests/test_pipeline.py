@@ -45,7 +45,8 @@ from repro.core.simulator import (DEFAULT_BANDWIDTHS, SimConfig,
 from repro.data.synthetic import WORKLOADS, CTRWorkload
 from repro.models import dlrm
 from repro.pipeline import (LookaheadWindow, PipelinedRunner, changed_ids,
-                            db_commit, db_init, staleness_bound, window_meta)
+                            db_commit, db_init, staleness_bound,
+                            staleness_bound_chain, window_meta)
 from repro.ps import make_partition
 
 
@@ -136,6 +137,38 @@ class TestDoubleBuffer:
         # a sample touching no changed id has exactly zero error
         np.testing.assert_array_equal(err[bound == 0.0], 0.0)
 
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_staleness_bound_chain_holds(self, seed):
+        """Two commits between decide and use: the per-sample error is
+        bounded by the chained bound (one staleness_bound term per
+        intervening commit, summed — triangle inequality)."""
+        rng = np.random.default_rng(seed)
+        n, V, L, k, F = 3, 64, 8, 12, 5
+        t_tran = rng.random(n) * 1e-3 + 1e-5
+        state0 = esd_sparse_init(n, V)
+        for _ in range(2):
+            state0, _ = esd_state_update_sparse(
+                state0, jnp.asarray(_need_ids(rng, n, V, L)))
+        state1, _ = esd_state_update_sparse(
+            state0, jnp.asarray(_need_ids(rng, n, V, L)))
+        state2, _ = esd_state_update_sparse(
+            state1, jnp.asarray(_need_ids(rng, n, V, L)))
+        samples = rng.integers(0, V, (k, F)).astype(np.int32)
+        samples[rng.random((k, F)) < 0.2] = -1
+        C0 = cost_matrix_sparse(samples, np.asarray(state0.latest),
+                                np.asarray(state0.dirty), t_tran)
+        C2 = cost_matrix_sparse(samples, np.asarray(state2.latest),
+                                np.asarray(state2.dirty), t_tran)
+        chain = [changed_ids(state0, state1), changed_ids(state1, state2)]
+        bound = staleness_bound_chain(samples, chain, t_tran)
+        err = np.abs(C0 - C2).max(axis=1)
+        assert (err <= bound + 1e-12).all()
+        # one-commit chain degenerates to the single-step bound
+        np.testing.assert_allclose(
+            staleness_bound_chain(samples, chain[:1], t_tran),
+            staleness_bound(samples, chain[0], t_tran))
+
     def test_staleness_bound_multips(self, rng):
         n, V, L, k, F, n_ps = 2, 60, 6, 8, 4, 2
         part = make_partition(V, n_ps)
@@ -212,20 +245,59 @@ class TestRunnerSchedule:
         ops = [e[0] for e in log]
         assert ops == ["decide", "advance", "train"] * 3
 
+    def test_decide_ahead_chain_staleness(self):
+        """With decide_ahead=A, the decision for step t+a is made on the
+        state committed a steps earlier — progressively stale along the
+        chain, exact once the chain drains."""
+        log = []
+        decide, advance, train = self._stages(log)
+        r = PipelinedRunner(decide, advance, train, 0, depth=2,
+                            decide_ahead=2)
+        r.run(range(5))
+        seen = [s for op, b, s in [e for e in log if e[0] == "decide"]]
+        assert seen == [0, 0, 0, 1, 2]
+        assert r.esd_state == 5
+        assert [e[1] for e in log if e[0] == "train"] == \
+            ["x%d" % i for i in range(5)]
+
+    def test_decide_ahead_repair_sees_both_states(self):
+        log = []
+        decide, advance, train = self._stages(log)
+        gaps = []
+
+        def repair(committed, decided_state, batch, assign):
+            gaps.append(committed - decided_state)
+            return assign, {"n_reassigned": committed - decided_state}
+
+        r = PipelinedRunner(decide, advance, train, 0, depth=1,
+                            decide_ahead=1, repair_fn=repair)
+        recs = r.run(range(3), record_fn=lambda t, loss, aux, info: info)
+        # the chain's staleness gap: 0 on the first pop, then 1 per the
+        # one buffered decision
+        assert gaps == [0, 1, 1]
+        assert [rec["n_reassigned"] for rec in recs] == [0, 1, 1]
+
     def test_invalid_args(self):
         f = lambda *a: None
         with pytest.raises(ValueError):
             PipelinedRunner(f, f, f, 0, depth=0)
         with pytest.raises(ValueError):
             PipelinedRunner(f, f, f, 0, depth=1, stale=True)
+        with pytest.raises(ValueError):
+            PipelinedRunner(f, f, f, 0, decide_ahead=-1)
+        with pytest.raises(ValueError):
+            PipelinedRunner(f, f, f, 0, depth=2, stale=True, decide_ahead=1)
+        with pytest.raises(ValueError):
+            PipelinedRunner(f, f, f, 0, repair_fn=f)
 
 
 # --------------------------------------------------------------------------
 # bitwise pipelined-vs-synchronous training (the backbone invariant)
 # --------------------------------------------------------------------------
-def _run_stage_pipeline(depth, steps=5, lookahead=0, stale=False):
+def _run_stage_pipeline(depth, steps=5, lookahead=0, stale=False,
+                        decide_ahead=0, repair=False):
     """The real jitted stages on a 1-device mesh, driven by the runner."""
-    from repro.launch.steps import make_dlrm_esd_stages
+    from repro.launch.steps import make_dlrm_esd_stages, make_dlrm_repair_stage
     from repro.optim import get_optimizer
 
     cfg = DLRM_CONFIGS["wdl-tiny"]
@@ -265,12 +337,20 @@ def _run_stage_pipeline(depth, steps=5, lookahead=0, stale=False):
     else:
         batches = ((tuple(map(jnp.asarray, item)), None) for item in src)
 
+    repair_fn = None
+    if repair:
+        rep = make_dlrm_repair_stage(mesh, n, m, t_tran)
+        repair_fn = lambda cs, ds, b, a: (
+            lambda out: (out[0], {"n_reassigned": out[1]}))(
+                rep(cs, ds, b[0][0], a))
+
     runner = PipelinedRunner(
         lambda s, b: decide(s, b[0][0]),
         lambda s, b, a: advance(s, *b[0], a),
         train_fn, esd, depth=depth, stale=stale,
+        decide_ahead=decide_ahead, repair_fn=repair_fn,
         realized_cost_fn=(lambda s, b, a: realized(s, b[0][0], a))
-        if stale else None)
+        if (stale or decide_ahead) else None)
     records = runner.run(batches, steps=steps,
                          record_fn=lambda t, loss, aux, info: {
                              "loss": float(loss),
@@ -292,6 +372,27 @@ class TestBitwiseEquivalence:
                                           np.asarray(esd_piped.dirty))
             np.testing.assert_array_equal(np.asarray(esd_sync.slots),
                                           np.asarray(esd_piped.slots))
+
+    def test_decide_ahead_depth4_window4(self):
+        """The acceptance configuration: depth=4 with a 3-deep decide
+        chain under a W=4 window.  On the 1-device mesh every assignment
+        is worker 0 regardless of staleness, so the chained run must be
+        bitwise the synchronous one — this pins the schedule (state
+        threading, repair and realized re-score included), while the
+        chain-bound property test bounds the decision error itself."""
+        sync, esd_sync = _run_stage_pipeline(depth=1)
+        recs, esd = _run_stage_pipeline(depth=4, lookahead=4,
+                                        decide_ahead=3, repair=True)
+        assert [r["loss"] for r in recs] == [r["loss"] for r in sync]
+        np.testing.assert_array_equal(np.asarray(esd_sync.latest),
+                                      np.asarray(esd.latest))
+        np.testing.assert_array_equal(np.asarray(esd_sync.dirty),
+                                      np.asarray(esd.dirty))
+        assert all("alg1_realized" in r and "n_reassigned" in r
+                   for r in recs)
+        # decide-ahead off is the unchanged exact path
+        recs0, _ = _run_stage_pipeline(depth=2, decide_ahead=0)
+        assert [r["loss"] for r in recs0] == [r["loss"] for r in sync]
 
     def test_stale_first_step_exact_and_corrected(self):
         recs, _ = _run_stage_pipeline(depth=2, stale=True)
