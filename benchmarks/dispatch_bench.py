@@ -29,7 +29,6 @@ with slack.
 """
 from __future__ import annotations
 
-import json
 import time
 from functools import partial
 from pathlib import Path
@@ -54,6 +53,7 @@ from repro.core.dispatch_tpu import (
     esd_state_update,
     esd_state_update_sparse,
 )
+from repro.obs import write_bench
 from repro.ps import make_partition
 
 RESULTS = Path(__file__).parent / "results"
@@ -212,7 +212,7 @@ def bench_multips(V: int, n_ps: int, reps: int, seed: int = 0) -> dict:
 
 
 def run_multips(vocabs=None, ps_list=None, reps: int = 3,
-                out: Path | None = None) -> dict:
+                out: Path | None = None, quick: bool = False) -> dict:
     """Multi-PS scaling curve: V past 1e7 with n_ps in {1, 2, 4} —
     writes benchmarks/results/BENCH_multips.json.  Sub-linearity check:
     per-step time at the largest V must grow far slower than V itself
@@ -237,9 +237,7 @@ def run_multips(vocabs=None, ps_list=None, reps: int = 3,
                 "v_ratio": v_hi / v_lo,
                 "time_ratio": by_v[v_hi] / by_v[v_lo],
             }
-    out = out or RESULTS / "BENCH_multips.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(report, indent=2))
+    write_bench("multips", report, quick=quick, out=out)
     return report
 
 
@@ -369,9 +367,6 @@ def run_exchange(quick: bool = False, out: Path | None = None) -> dict:
     """Exchange sweep -> BENCH_exchange.json (quick runs land in
     BENCH_exchange_quick.json so CI smoke never clobbers the tracked
     full-sweep record)."""
-    if out is None:
-        out = RESULTS / ("BENCH_exchange_quick.json" if quick
-                         else "BENCH_exchange.json")
     zipfs = [1.2] if quick else [0.0, 0.8, 1.2]
     ns = [8] if quick else [8, 16]
     iters = 8 if quick else 24
@@ -399,17 +394,13 @@ def run_exchange(quick: bool = False, out: Path | None = None) -> dict:
               f"{c['alg1_fp32_decisions_at_codec_prices']:.4f},"
               f"mixed_alg1={c['mixed']['alg1_cost']:.4f}"
               f"<fp32={c['fp32']['alg1_cost']:.4f}")
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(report, indent=2))
+    write_bench("exchange", report, quick=quick, out=out)
     return report
 
 
 def run(quick: bool = False, out: Path | None = None) -> dict:
     # quick runs land in a separate file so CI smoke never clobbers the
     # tracked full-sweep perf-trajectory record
-    if out is None:
-        out = RESULTS / ("BENCH_dispatch_quick.json" if quick
-                         else "BENCH_dispatch.json")
     vocabs = [20_000] if quick else [20_000, 200_000, 1_000_000]
     report = {"config": {"n": N, "m": M, "F": F, "cache_ratio": CACHE_RATIO},
               "results": []}
@@ -424,8 +415,7 @@ def run(quick: bool = False, out: Path | None = None) -> dict:
         print(f"dispatch.V{V}.numpy,{npy['sparse_ms'] * 1e3:.0f},"
               f"dense_us={npy['dense_ms'] * 1e3:.0f},"
               f"speedup={npy['speedup']:.1f}x")
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(report, indent=2))
+    write_bench("dispatch", report, quick=quick, out=out)
     return report
 
 
@@ -449,8 +439,6 @@ if __name__ == "__main__":
     elif args.multips:
         ps_list = [int(x) for x in args.ps.split(",")]
         run_multips(vocabs=[200_000, 2_000_000] if args.quick else None,
-                    ps_list=ps_list,
-                    out=(RESULTS / "BENCH_multips_quick.json"
-                         if args.quick else None))
+                    ps_list=ps_list, quick=args.quick)
     else:
         run(quick=args.quick)

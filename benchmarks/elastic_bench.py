@@ -24,7 +24,6 @@ it asserts finite loss-side stats, a crash-and-rejoin run that keeps
 """
 from __future__ import annotations
 
-import json
 from pathlib import Path
 
 import numpy as np
@@ -32,8 +31,7 @@ import numpy as np
 from repro.core import SimConfig, simulate
 from repro.data.synthetic import CTRWorkload
 from repro.elastic import FaultPlan
-
-RESULTS = Path(__file__).parent / "results"
+from repro.obs import write_bench
 N = 8
 
 
@@ -97,9 +95,6 @@ def bench_scenarios(iters: int) -> dict:
 
 
 def run(quick: bool = False, out: Path | None = None) -> dict:
-    if out is None:
-        out = RESULTS / ("BENCH_elastic_quick.json" if quick
-                         else "BENCH_elastic.json")
     iters = 12 if quick else 48
     report = {"config": {"zipf_a": 1.2, "iters": iters, "n_workers": N,
                          "mechanism": "esd", "exchange": "ragged"},
@@ -124,8 +119,7 @@ def run(quick: bool = False, out: Path | None = None) -> dict:
     assert cr["min_active"] == N - 1, cr
     assert cr["tail_vs_oracle"] <= 1.10, cr
     assert sc["flash_crowd"]["min_active"] == N - 3, sc["flash_crowd"]
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(report, indent=2))
+    write_bench("elastic", report, quick=quick, out=out)
     return report
 
 

@@ -33,7 +33,6 @@ device streams).
 """
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 
@@ -41,8 +40,7 @@ import numpy as np
 
 from repro.core import SimConfig, simulate
 from repro.data.synthetic import CTRWorkload
-
-RESULTS = Path(__file__).parent / "results"
+from repro.obs import write_bench
 
 
 def _workload(a: float = 1.2) -> CTRWorkload:
@@ -216,9 +214,6 @@ def bench_runner(steps: int = 6) -> dict:
 
 
 def run(quick: bool = False, out: Path | None = None) -> dict:
-    if out is None:
-        out = RESULTS / ("BENCH_pipeline_quick.json" if quick
-                         else "BENCH_pipeline.json")
     iters = 12 if quick else 40
     # full run: the paper's alpha=1 regime (decision ~ a full train step,
     # the strongest hiding case); quick: alpha=0.5 keeps the host-side
@@ -257,8 +252,7 @@ def run(quick: bool = False, out: Path | None = None) -> dict:
           f"vs_belady={pd['vs_belady']:.2f}x,"
           f"within_1.3x={pd['within_belady_1p3x']},"
           f"loss_invariant={pd['loss_invariant']}")
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(report, indent=2))
+    write_bench("pipeline", report, quick=quick, out=out)
     return report
 
 

@@ -25,7 +25,7 @@ from pathlib import Path
 
 import numpy as np
 
-RESULTS = Path(__file__).parent / "results"
+from repro.obs import write_bench
 
 
 def _run_driver(codec: str | None, steps: int) -> list[dict]:
@@ -41,7 +41,10 @@ def _run_driver(codec: str | None, steps: int) -> list[dict]:
     if res.returncode != 0:
         raise RuntimeError(f"driver failed for codec={codec}:\n"
                            f"{res.stderr[-2000:]}")
-    return [json.loads(l) for l in res.stdout.splitlines()
+    # step records go to stderr via obs.log_step; keep stdout too for
+    # drivers predating the structured-logging move
+    return [json.loads(l)
+            for l in (res.stdout + res.stderr).splitlines()
             if l.startswith("{")]
 
 
@@ -61,9 +64,6 @@ def _census(codec: str | None) -> dict | None:
 
 
 def run(quick: bool = False, out: Path | None = None) -> dict:
-    if out is None:
-        out = RESULTS / ("BENCH_quant_quick.json" if quick
-                         else "BENCH_quant.json")
     codecs = [None, "int8"] if quick else [None, "fp16", "int8", "int4"]
     steps = 8 if quick else 40
     report = {"config": {"arch": "wdl-tiny", "steps": steps,
@@ -93,8 +93,7 @@ def run(quick: bool = False, out: Path | None = None) -> dict:
         assert report["results"]["int8"]["quant"]["byte_reduction"] >= 4.0
     assert fp32["losses"][-1] < fp32["losses"][0]
 
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(report, indent=2))
+    write_bench("quant", report, quick=quick, out=out)
     return report
 
 

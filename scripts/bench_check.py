@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Validate every BENCH_*.json artifact against the shared obs schema.
+
+Walks benchmarks/results/ (or the paths given on the command line),
+maps each filename to its bench schema via
+``repro.obs.schema.bench_name_from_path``, and runs
+``repro.obs.schema.validate_bench`` — the same gates
+``obs.artifacts.write_bench`` enforces at write time.  This closes the
+other half of the loop: write_bench stops a *new* bad artifact from
+landing; bench_check catches a *tracked* artifact that has drifted from
+the schema (or a schema change that silently un-gates an artifact), and
+gives CI one command to assert the whole results directory is coherent.
+
+Exit status: 0 if every artifact validates, 1 otherwise (every failure
+is reported, not just the first).  Unknown BENCH names are failures —
+an unvalidated artifact is exactly the regression this tool exists to
+catch; add a schema in repro.obs.schema when adding a bench.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.obs.schema import (  # noqa: E402
+    SCHEMAS,
+    SchemaError,
+    bench_name_from_path,
+    validate_bench,
+)
+
+
+def check(path: Path) -> list[str]:
+    """Return a list of failure strings for one artifact (empty = ok)."""
+    name = bench_name_from_path(path.name)
+    if name is None:
+        return [f"{path.name}: not a BENCH_*.json artifact name"]
+    if name not in SCHEMAS:
+        return [f"{path.name}: no schema registered for bench '{name}' "
+                f"(known: {', '.join(sorted(SCHEMAS))})"]
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    try:
+        validate_bench(name, doc)
+    except SchemaError as e:
+        return [f"{path.name}: {line}" for line in str(e).splitlines()]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="artifacts to check (default: every BENCH_*.json "
+                         "under benchmarks/results/)")
+    args = ap.parse_args(argv)
+    paths = args.paths or sorted(
+        (REPO / "benchmarks" / "results").glob("BENCH_*.json"))
+    if not paths:
+        print("bench_check: no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+    failures = []
+    for path in paths:
+        errs = check(path)
+        failures.extend(errs)
+        status = "FAIL" if errs else "ok"
+        print(f"bench_check: {path.name}: {status}")
+    for line in failures:
+        print(f"bench_check: {line}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -56,7 +56,26 @@ python -m benchmarks.elastic_bench --quick
 # quantized-exchange smoke: fp32 vs int8 driver runs must both learn and
 # the int8 census must show >= 4x fewer wire bytes
 python -m benchmarks.quant_bench --quick
-echo "pre-test gate (compileall + quickstart + exchange/pipeline/elastic/quant smoke): $((SECONDS - t0))s"
+# observability smoke: disabled tracer must be bitwise-identical to a
+# traced depth-2 run, enabled-tracer overhead <= 3%, and the measured
+# decide-inside-train overlap must grow with pipeline depth
+python -m benchmarks.obs_bench --quick
+# every BENCH_*.json (tracked full sweeps AND the quick artifacts the
+# gate just wrote) must satisfy the shared schema gates
+python scripts/bench_check.py
+# traced driver smoke: a real pipelined run must export a valid Chrome
+# trace and print the top-10 slowest spans + the predicted-vs-measured
+# timing report (stderr)
+python -m repro.launch.train --arch wdl-tiny --steps 8 \
+  --batch-per-worker 8 --esd-alpha 1 --pipeline-depth 2 --lookahead 8 \
+  --prefetch 16 --exchange ragged \
+  --trace-out /tmp/repro-ci-trace.json --validate-timing > /dev/null
+python - /tmp/repro-ci-trace.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["traceEvents"], "empty trace"
+EOF
+echo "pre-test gate (compileall + quickstart + exchange/pipeline/elastic/quant/obs smoke + bench schema check + traced driver): $((SECONDS - t0))s"
 
 t0=$SECONDS
 env "${TEST_ENV[@]}" python -m pytest -q --durations=10

@@ -25,6 +25,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs.trace import get_tracer
+
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
 
 _SEP = "::"
@@ -57,16 +59,17 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
 
 
 def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
-    directory = Path(directory)
-    directory.mkdir(parents=True, exist_ok=True)
-    # a crashed earlier save may have left partial .tmp files behind
-    for stale in directory.glob("ckpt_*.tmp.npz"):
-        stale.unlink(missing_ok=True)
-    path = directory / f"ckpt_{step:08d}.npz"
-    tmp = path.with_suffix(".tmp.npz")
-    np.savez(tmp, __step__=np.int64(step), **_flatten(tree))
-    tmp.rename(path)
-    return path
+    with get_tracer().span("checkpoint.save", track="io", step=step):
+        directory = Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        # a crashed earlier save may have left partial .tmp files behind
+        for stale in directory.glob("ckpt_*.tmp.npz"):
+            stale.unlink(missing_ok=True)
+        path = directory / f"ckpt_{step:08d}.npz"
+        tmp = path.with_suffix(".tmp.npz")
+        np.savez(tmp, __step__=np.int64(step), **_flatten(tree))
+        tmp.rename(path)
+        return path
 
 
 def _steps(directory: Path) -> list[int]:
@@ -109,22 +112,25 @@ def restore_checkpoint(directory: str | Path, tree_like: Any,
     in turn — only *archive* corruption triggers the fallback, a shape
     mismatch or missing leaf is a caller bug and raises immediately.
     """
-    directory = Path(directory)
-    flat_paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
-    if step is not None:
-        leaves = _load_leaves(directory / f"ckpt_{step:08d}.npz", flat_paths)
-        return jax.tree_util.tree_unflatten(treedef, leaves), step
-    candidates = _steps(directory)
-    if not candidates:
-        raise FileNotFoundError(f"no checkpoints in {directory}")
-    for s in reversed(candidates):
-        path = directory / f"ckpt_{s:08d}.npz"
-        try:
-            leaves = _load_leaves(path, flat_paths)
-        except (zipfile.BadZipFile, EOFError, OSError) as e:
-            warnings.warn(f"skipping unreadable checkpoint {path.name}: {e}",
-                          RuntimeWarning, stacklevel=2)
-            continue
-        return jax.tree_util.tree_unflatten(treedef, leaves), s
-    raise FileNotFoundError(f"no readable checkpoint in {directory} "
-                            f"(tried steps {candidates})")
+    with get_tracer().span("checkpoint.restore", track="io"):
+        directory = Path(directory)
+        flat_paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        if step is not None:
+            leaves = _load_leaves(directory / f"ckpt_{step:08d}.npz",
+                                  flat_paths)
+            return jax.tree_util.tree_unflatten(treedef, leaves), step
+        candidates = _steps(directory)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        for s in reversed(candidates):
+            path = directory / f"ckpt_{s:08d}.npz"
+            try:
+                leaves = _load_leaves(path, flat_paths)
+            except (zipfile.BadZipFile, EOFError, OSError) as e:
+                warnings.warn(
+                    f"skipping unreadable checkpoint {path.name}: {e}",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            return jax.tree_util.tree_unflatten(treedef, leaves), s
+        raise FileNotFoundError(f"no readable checkpoint in {directory} "
+                                f"(tried steps {candidates})")

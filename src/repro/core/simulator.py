@@ -84,6 +84,7 @@ import numpy as np
 
 from ..data.synthetic import CTRWorkload
 from ..exchange.plan import compile_plan
+from ..obs.metrics import MetricsRegistry
 from ..ps import make_partition
 from .baselines import (FAECache, HETCache, laia_dispatch, random_dispatch,
                         random_dispatch_active)
@@ -242,6 +243,12 @@ class SimResult:
     # quantized-wire accounting (SimConfig.codec / codec_policy set):
     # per-link codec census + embedding fp32-vs-wire byte totals
     quant: dict | None = None
+    # namespaced registry snapshot (repro.obs.metrics) — the same
+    # quantities the fields above are reduced from, under the unified
+    # metric names (cache.hits, exchange.wire_bytes, elastic.min_active,
+    # ...).  The legacy fields stay the canonical API; this is the view
+    # the observability layer reads.
+    metrics: dict | None = None
 
     def summary(self) -> dict:
         out = {
@@ -296,7 +303,15 @@ def _worker_batches(samples: np.ndarray, assign: np.ndarray, n: int,
     return [part % vocab for part in np.split(uniq, splits)]
 
 
-def simulate(cfg: SimConfig) -> SimResult:
+def simulate(cfg: SimConfig,
+             registry: MetricsRegistry | None = None) -> SimResult:
+    # All accumulators live in a metrics registry under the unified
+    # namespace (cache.*, exchange.*, dispatch.*, elastic.*, sim.*);
+    # SimResult fields are reduced from it with the exact numpy
+    # expressions the old bare-list accumulators used, so results are
+    # bitwise-unchanged.  Pass a registry to read the metrics after the
+    # run (each call wants a fresh one — counters are cumulative).
+    reg = registry if registry is not None else MetricsRegistry()
     n, m, k = cfg.n_workers, cfg.batch_per_worker, cfg.k
     bw = cfg.bandwidths if cfg.bandwidths is not None else DEFAULT_BANDWIDTHS(n)
     t_tran = transmission_time(cfg.d_tran, bw)
@@ -381,21 +396,39 @@ def simulate(cfg: SimConfig) -> SimResult:
                              "does not support membership churn")
         elastic_acc = {"events": [e.to_dict() for e in faults.events
                                   if e.step < cfg.iters],
-                       "flush_push_ops": 0, "handoff_rows": 0,
-                       "handoff_time_s": 0.0, "min_active": n}
+                       "flush_push_ops": reg.counter("elastic.flush_push_ops"),
+                       "handoff_rows": reg.counter("elastic.handoff_rows"),
+                       "handoff_time_s": reg.counter("elastic.handoff_time_s"),
+                       "min_active": reg.gauge("elastic.min_active")}
+        elastic_acc["min_active"].set(n)
 
     stream = cfg.workload.stream(cfg.seed + 1, k)
     if cfg.lookahead > 0:
         from ..pipeline.window import LookaheadWindow
         stream = LookaheadWindow(stream, cfg.lookahead, key=lambda b: b[0])
 
-    per_iter_cost, per_iter_time, dec_times, alg1_costs = [], [], [], []
-    train_stage_times, dedup_saved, dedup_touches = [], 0, 0
-    pre_total = dem_total = 0
+    # kept histograms retain every sample so the post-loop reductions can
+    # reuse the original numpy expressions verbatim
+    h_cost = reg.histogram("sim.iter_cost_s", keep=True)
+    h_time = reg.histogram("sim.iter_time_s", keep=True)
+    h_dec = reg.histogram("dispatch.decision_s", keep=True)
+    h_alg1 = reg.histogram("dispatch.alg1_cost", keep=True)
+    h_train = reg.histogram("sim.train_stage_s", keep=True)
+    c_dedup_saved = reg.counter("prefetch.window_dedup_saved")
+    c_dedup_touch = reg.counter("prefetch.window_touches")
+    c_pre = reg.counter("cache.miss_prefetched")
+    c_dem = reg.counter("cache.demand_miss")
+    c_hits = reg.counter("cache.hits")
+    c_lookups = reg.counter("cache.lookups")
     split_seen = False
-    exch_acc = ({"mode": cfg.exchange, "payload_bytes": 0, "wire_bytes": 0,
-                 "padded_wire_bytes": 0, "times": []}
-                if cfg.exchange is not None else None)
+    exch_acc = None
+    if cfg.exchange is not None:
+        exch_acc = {"mode": cfg.exchange,
+                    "payload_bytes": reg.counter("exchange.payload_bytes"),
+                    "wire_bytes": reg.counter("exchange.wire_bytes"),
+                    "padded_wire_bytes":
+                        reg.counter("exchange.padded_wire_bytes"),
+                    "times": reg.histogram("exchange.time_s", keep=True)}
     quant_acc = None
     if link_codecs is not None:
         from ..quant.codecs import meta_row_bytes, wire_row_bytes
@@ -407,10 +440,10 @@ def simulate(cfg: SimConfig) -> SimResult:
         _meta_b = np.vectorize(
             lambda c: meta_row_bytes(E, c), otypes=[np.int64])(link_codecs)
         quant_acc = {"ops": np.zeros(link_codecs.shape, np.int64)}
-    hits = lookups = 0
     ingredient = {
-        "5Gbps": {"miss_pull": 0, "update_push": 0, "evict_push": 0},
-        "0.5Gbps": {"miss_pull": 0, "update_push": 0, "evict_push": 0},
+        cls: {op: reg.counter(f"cache.{cls}.{op}")
+              for op in ("miss_pull", "update_push", "evict_push")}
+        for cls in ("5Gbps", "0.5Gbps")
     }
     fast = bw >= np.median(bw)
 
@@ -425,8 +458,8 @@ def simulate(cfg: SimConfig) -> SimResult:
             if use_ps:
                 protect = protect.linearize(part)  # hashed layouts unsort
             if it >= cfg.warmup:
-                dedup_saved += wmeta.dedup_saved
-                dedup_touches += wmeta.total_touches
+                c_dedup_saved.inc(wmeta.dedup_saved)
+                c_dedup_touch.inc(wmeta.total_touches)
         else:
             samples, _, _ = next(stream)
         if use_ps:
@@ -439,8 +472,8 @@ def simulate(cfg: SimConfig) -> SimResult:
         t_it, tps_it, bw_it, handoff_t = t_tran, t_ps, bw, 0.0
         if faults is not None:
             cs = faults.state_at(it)
-            elastic_acc["min_active"] = min(elastic_acc["min_active"],
-                                            cs.n_active)
+            elastic_acc["min_active"].set(
+                min(elastic_acc["min_active"].value, cs.n_active))
             bw_it = bw * cs.bw_factor
             if use_ps:
                 tps_it = effective_t(t_ps, cs)
@@ -453,7 +486,7 @@ def simulate(cfg: SimConfig) -> SimResult:
                     if flushed:
                         # the leaver drains its dirty rows to the PS over
                         # its own link (per-PS: shards in parallel)
-                        elastic_acc["flush_push_ops"] += flushed
+                        elastic_acc["flush_push_ops"].inc(flushed)
                         if use_ps:
                             handoff_t += float(
                                 (res["flushed_ps"] * tps_it[ev.target]).max())
@@ -473,8 +506,8 @@ def simulate(cfg: SimConfig) -> SimResult:
                     hp_t = float(exchange_worker_times(hp.link_bytes(),
                                                        bw_it).max())
                     handoff_t += hp_t
-                    elastic_acc["handoff_rows"] += hp.rows
-                    elastic_acc["handoff_time_s"] += hp_t
+                    elastic_acc["handoff_rows"].inc(hp.rows)
+                    elastic_acc["handoff_time_s"].inc(hp_t)
 
         t0 = time.perf_counter()
         alg1 = None
@@ -578,10 +611,10 @@ def simulate(cfg: SimConfig) -> SimResult:
             link_bytes = rows_link * plan.row_bytes
             exch_t = float(exchange_worker_times(link_bytes, bw_it).max())
             if it >= cfg.warmup:
-                exch_acc["payload_bytes"] += plan.stats.payload_bytes
-                exch_acc["wire_bytes"] += int(link_bytes.sum())
-                exch_acc["padded_wire_bytes"] += plan.stats.padded_bytes
-                exch_acc["times"].append(exch_t)
+                exch_acc["payload_bytes"].inc(plan.stats.payload_bytes)
+                exch_acc["wire_bytes"].inc(int(link_bytes.sum()))
+                exch_acc["padded_wire_bytes"].inc(plan.stats.padded_bytes)
+                exch_acc["times"].observe(exch_t)
         # two pipeline stages: training (compute + PS sync + sample
         # exchange) and the dispatch decision (+ plan) for the next
         # iteration.  Pipelined they overlap (max); synchronous they sum.
@@ -601,24 +634,24 @@ def simulate(cfg: SimConfig) -> SimResult:
             iter_time = train_stage + dec_t + pre_t
 
         if it >= cfg.warmup:
-            per_iter_cost.append(cost)
-            per_iter_time.append(iter_time)
-            train_stage_times.append(train_stage)
-            dec_times.append(dec_t)
+            h_cost.observe(cost)
+            h_time.observe(iter_time)
+            h_train.observe(train_stage)
+            h_dec.observe(dec_t)
             if alg1 is not None:
-                alg1_costs.append(alg1)
-            hits += int(stats.hits.sum())
-            lookups += int(stats.lookups.sum())
+                h_alg1.observe(alg1)
+            c_hits.inc(int(stats.hits.sum()))
+            c_lookups.inc(int(stats.lookups.sum()))
             if stats.miss_prefetched is not None:
                 # baseline caches (HET/FAE) build their own IterStats and
                 # report no split — guard, don't fake zeros
                 split_seen = True
-                pre_total += int(stats.miss_prefetched.sum())
-                dem_total += int(stats.miss_demand.sum())
+                c_pre.inc(int(stats.miss_prefetched.sum()))
+                c_dem.inc(int(stats.miss_demand.sum()))
             for cls, mask in (("5Gbps", fast), ("0.5Gbps", ~fast)):
-                ingredient[cls]["miss_pull"] += int(stats.miss_pull[mask].sum())
-                ingredient[cls]["update_push"] += int(stats.update_push[mask].sum())
-                ingredient[cls]["evict_push"] += int(stats.evict_push[mask].sum())
+                ingredient[cls]["miss_pull"].inc(int(stats.miss_pull[mask].sum()))
+                ingredient[cls]["update_push"].inc(int(stats.update_push[mask].sum()))
+                ingredient[cls]["evict_push"].inc(int(stats.evict_push[mask].sum()))
             if quant_acc is not None:
                 if link_codecs.ndim == 2:
                     ops = (np.asarray(stats.miss_pull_ps)
@@ -630,22 +663,26 @@ def simulate(cfg: SimConfig) -> SimResult:
                            + np.asarray(stats.evict_push))
                 quant_acc["ops"] += ops.astype(np.int64)
 
-    per_iter_cost = np.asarray(per_iter_cost)
-    per_iter_time = np.asarray(per_iter_time)
+    per_iter_cost = np.asarray(h_cost.samples)
+    per_iter_time = np.asarray(h_time.samples)
+    dec_times = h_dec.samples
     exchange = None
     if exch_acc is not None:
-        pad = exch_acc["wire_bytes"] - exch_acc["payload_bytes"]
-        pad_base = exch_acc["padded_wire_bytes"] - exch_acc["payload_bytes"]
+        payload_b = exch_acc["payload_bytes"].value
+        wire_b = exch_acc["wire_bytes"].value
+        padded_b = exch_acc["padded_wire_bytes"].value
+        pad = wire_b - payload_b
+        pad_base = padded_b - payload_b
         exchange = {
             "mode": exch_acc["mode"],
-            "payload_bytes": exch_acc["payload_bytes"],
-            "wire_bytes": exch_acc["wire_bytes"],
-            "padded_wire_bytes": exch_acc["padded_wire_bytes"],
+            "payload_bytes": payload_b,
+            "wire_bytes": wire_b,
+            "padded_wire_bytes": padded_b,
             "pad_bytes": pad,
             "pad_reduction": ((1.0 - pad / pad_base) if pad_base
                               else (1.0 if pad == 0 else 0.0)),
-            "time_mean_s": float(np.mean(exch_acc["times"]))
-            if exch_acc["times"] else 0.0,
+            "time_mean_s": float(np.mean(exch_acc["times"].samples))
+            if exch_acc["times"].samples else 0.0,
         }
     quant = None
     if quant_acc is not None:
@@ -654,6 +691,9 @@ def simulate(cfg: SimConfig) -> SimResult:
         fp32_b = int(ops.sum()) * int(cfg.d_tran)
         wire_b = int((ops * _wire_b).sum())
         meta_b = int((ops * _meta_b).sum())
+        reg.counter("quant.emb_fp32_bytes").inc(fp32_b)
+        reg.counter("quant.emb_wire_bytes").inc(wire_b)
+        reg.counter("quant.emb_meta_bytes").inc(meta_b)
         names, cnts = np.unique(link_codecs.astype(str), return_counts=True)
         quant = {
             "codec": codec_name(cfg.codec),
@@ -664,35 +704,47 @@ def simulate(cfg: SimConfig) -> SimResult:
             "emb_meta_bytes": meta_b,
             "byte_reduction": (fp32_b / wire_b) if wire_b else None,
         }
+    # legacy plain-int ingredient dict, reduced from the counters
+    ingredient = {cls: {op: c.value for op, c in ops_.items()}
+                  for cls, ops_ in ingredient.items()}
     pipeline = {
         "depth": cfg.pipeline_depth,
         "lookahead": cfg.lookahead,
-        "train_stage_mean_s": (float(np.mean(train_stage_times))
-                               if train_stage_times else 0.0),
+        "train_stage_mean_s": (float(np.mean(h_train.samples))
+                               if h_train.samples else 0.0),
         "decision_stage_mean_s": (float(np.mean(dec_times))
                                   if dec_times else 0.0),
         "miss_pull_total": int(sum(ingredient[c]["miss_pull"]
                                    for c in ingredient)),
-        "dedup_saved_ops": int(dedup_saved),
-        "dedup_total_touches": int(dedup_touches),
+        "dedup_saved_ops": int(c_dedup_saved.value),
+        "dedup_total_touches": int(c_dedup_touch.value),
         "prefetch": bool(cfg.prefetch),
     }
     if split_seen:
+        pre_total, dem_total = c_pre.value, c_dem.value
         pipeline["miss_prefetched_total"] = pre_total
         pipeline["miss_demand_total"] = dem_total
         pipeline["prefetch_hit_rate"] = pre_total / max(pre_total + dem_total,
                                                         1)
+    elastic = None
+    if elastic_acc is not None:
+        elastic = {"events": elastic_acc["events"],
+                   "flush_push_ops": elastic_acc["flush_push_ops"].value,
+                   "handoff_rows": elastic_acc["handoff_rows"].value,
+                   "handoff_time_s": elastic_acc["handoff_time_s"].value,
+                   "min_active": elastic_acc["min_active"].value}
     return SimResult(
         cost=float(per_iter_cost.sum()),
         itps=float(len(per_iter_time) / per_iter_time.sum()),
-        hit_ratio=hits / max(lookups, 1),
+        hit_ratio=c_hits.value / max(c_lookups.value, 1),
         decision_time_mean=float(np.mean(dec_times)),
         ingredient=ingredient,
         per_iter_cost=per_iter_cost,
         per_iter_time=per_iter_time,
-        alg1_cost=float(np.sum(alg1_costs)) if alg1_costs else None,
+        alg1_cost=float(np.sum(h_alg1.samples)) if h_alg1.samples else None,
         exchange=exchange,
         pipeline=pipeline,
-        elastic=elastic_acc,
+        elastic=elastic,
         quant=quant,
+        metrics=reg.snapshot(),
     )

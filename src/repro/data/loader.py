@@ -12,6 +12,8 @@ import queue
 import threading
 from typing import Any, Callable, Iterator
 
+from repro.obs.trace import get_tracer
+
 __all__ = ["PrefetchLoader", "DispatchingLoader"]
 
 _SENTINEL = object()
@@ -28,8 +30,17 @@ class PrefetchLoader:
         self._thread.start()
 
     def _run(self):
+        # Each upstream pull is spanned on the "loader" track: these
+        # spans come from the worker thread, so in an exported trace
+        # they genuinely overlap the main thread's stages.
         try:
-            for item in self._it:
+            it = iter(self._it)
+            while True:
+                with get_tracer().span("data.load", track="loader"):
+                    try:
+                        item = next(it)
+                    except StopIteration:
+                        break
                 self._q.put(item)
         except BaseException as e:  # pragma: no cover
             self._err = e

@@ -35,6 +35,7 @@ import dataclasses
 import numpy as np
 
 from ..exchange.plan import bucket_sizes
+from repro.obs.trace import traced
 
 __all__ = ["cost_column_bias", "mask_state", "HandoffPlan",
            "departure_handoff", "rejoin_handoff"]
@@ -139,6 +140,7 @@ class HandoffPlan:
         return bucket_sizes(self.link_rows) * self.row_bytes
 
 
+@traced("cache.handoff.departure", track="elastic")
 def departure_handoff(cache, worker: int, inventory: np.ndarray, active,
                       row_bytes: float = 4.0) -> HandoffPlan:
     """Distribute a graceful leaver's clean inventory to the survivors.
@@ -162,6 +164,7 @@ def departure_handoff(cache, worker: int, inventory: np.ndarray, active,
     return HandoffPlan("departure", worker, link_rows, row_bytes)
 
 
+@traced("cache.handoff.rejoin", track="elastic")
 def rejoin_handoff(cache, worker: int, active,
                    row_bytes: float = 4.0) -> HandoffPlan:
     """Warm a rejoining worker from its peers' hottest clean rows.

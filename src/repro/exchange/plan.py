@@ -46,6 +46,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.trace import traced
+
 __all__ = ["ExchangePlan", "PlanStats", "bucket_sizes", "compile_plan",
            "gather_reference"]
 
@@ -167,6 +169,7 @@ class ExchangePlan:
         return self.buckets.sum(axis=0)
 
 
+@traced("exchange.compile", track="exchange")
 def compile_plan(assign: np.ndarray, n: int, m: int | None = None,
                  row_bytes: int = 4, cap: int | None = None,
                  active: np.ndarray | None = None,

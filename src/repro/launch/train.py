@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
+import sys
 import time
 from functools import partial
 from itertools import count
@@ -54,6 +54,8 @@ from ..data.loader import PrefetchLoader
 from ..data.synthetic import WORKLOADS, token_stream
 from ..dist.sharding import param_specs, to_shardings
 from ..elastic import FaultPlan, cost_column_bias, effective_t
+from ..obs import (MetricsRegistry, Tracer, format_report, get_tracer,
+                   log_step, set_registry, set_tracer, validate_timing)
 from ..pipeline import (LookaheadWindow, PipelinedRunner, prefetch_candidates,
                         prefetch_init, prefetch_step, staged_membership)
 from .steps import make_dlrm_esd_stages, make_dlrm_repair_stage
@@ -272,11 +274,15 @@ def run_dlrm(args):
         if codec is not None:
             qres = jax.tree.map(jnp.asarray, restored["qres"])
         if args.verbose:
-            print(json.dumps({"resumed_from_step": start}), flush=True)
+            log_step({"resumed_from_step": start})
     if start >= args.steps:
         return []
 
-    metrics = []
+    # unified metrics registry; the returned `metrics` list is its
+    # legacy per-step view (same dict shapes as ever)
+    reg = MetricsRegistry()
+    set_registry(reg)
+    metrics = reg.steps
     t_total = jnp.asarray(t_tran)
     last_t = time.perf_counter()
     esd_seen = {}   # step -> post-advance dispatch state, for checkpoints
@@ -284,8 +290,7 @@ def run_dlrm(args):
     def record(i, loss, counts, meta, info, pulled=None):
         nonlocal last_t
         now = time.perf_counter()
-        rec = {"step": i, "loss": float(loss),
-               "wall_s": round(now - last_t, 4)}
+        rec = {"loss": float(loss), "wall_s": round(now - last_t, 4)}
         last_t = now
         esd_snap = esd_seen.pop(i, None)
         if counts is not None:
@@ -326,9 +331,11 @@ def run_dlrm(args):
             rec["n_reassigned"] = int(np.asarray(info["n_reassigned"]))
         if plan is not None:
             rec["n_active"] = plan.state_at(i).n_active
-        metrics.append(rec)
+        # appends the legacy-shaped record to `metrics` (reg.steps) and
+        # folds the fields into the namespaced cumulative metrics
+        rec = reg.record_step(i, rec)
         if args.verbose and (i % args.log_every == 0 or i == args.steps - 1):
-            print(json.dumps(rec), flush=True)
+            log_step(rec)
         if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
             tree = {"params": params, "opt": opt_state}
             if esd_snap is not None:
@@ -410,10 +417,12 @@ def run_dlrm(args):
                                                    memb)
                 cids, cexp = prefetch_candidates(meta, i, pf_cands)
                 resident = new_state.latest.any(axis=0)
-                pf_plane, n_pulled = prefetch_step(
-                    pf_plane, params["embed"], resident,
-                    jnp.asarray(cids), jnp.asarray(cexp), i,
-                    budget=args.prefetch, codec=args.codec)
+                with get_tracer().span("prefetch.pull", track="prefetch",
+                                       step=i):
+                    pf_plane, n_pulled = prefetch_step(
+                        pf_plane, params["embed"], resident,
+                        jnp.asarray(cids), jnp.asarray(cexp), i,
+                        budget=args.prefetch, codec=args.codec)
                 aux["prefetch_pulled"] = n_pulled
             else:
                 x, new_state, counts = advance_jit(state, s, d, l, assign)
@@ -523,7 +532,7 @@ def run_lm(args):
         params = jax.device_put(restored["params"], p_shd)
         opt_state = jax.device_put(restored["opt"], o_shd)
         if args.verbose:
-            print(json.dumps({"resumed_from_step": start}), flush=True)
+            log_step({"resumed_from_step": start})
 
     B = max(args.batch_per_worker * n_dev, n_dev)
     S = args.seq_len
@@ -538,19 +547,23 @@ def run_lm(args):
     stream = PrefetchLoader(token_stream(args.seed, cfg.vocab, B, S + 1), depth=2)
     for _ in range(start):
         next(stream)
-    metrics = []
+    reg = MetricsRegistry()
+    set_registry(reg)
+    metrics = reg.steps
     for i in range(start, args.steps):
         tok = next(stream)
         t0 = time.perf_counter()
-        params, opt_state, loss = step(
-            params, opt_state,
-            jax.device_put(jnp.asarray(tok[:, :-1]), tok_shd),
-            jax.device_put(jnp.asarray(tok[:, 1:]), tok_shd))
-        rec = {"step": i, "loss": float(loss),
-               "wall_s": round(time.perf_counter() - t0, 4)}
-        metrics.append(rec)
+        with get_tracer().span("train.sync", track="train/0", step=i):
+            params, opt_state, loss = step(
+                params, opt_state,
+                jax.device_put(jnp.asarray(tok[:, :-1]), tok_shd),
+                jax.device_put(jnp.asarray(tok[:, 1:]), tok_shd))
+            loss = float(loss)
+        rec = reg.record_step(i, {"loss": loss,
+                                  "wall_s": round(time.perf_counter() - t0,
+                                                  4)})
         if args.verbose and (i % args.log_every == 0 or i == args.steps - 1):
-            print(json.dumps(rec), flush=True)
+            log_step(rec)
         if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, i + 1,
                             {"params": params, "opt": opt_state})
@@ -648,14 +661,53 @@ def build_parser():
                          "continue from its step")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--verbose", action="store_true", default=True)
+    ap.add_argument("--trace-out", type=Path, default=None,
+                    help="export a Chrome/Perfetto trace_event JSON of "
+                         "the run's spans (decide/advance/train/prefetch/"
+                         "loader/io tracks) to this path; open it in "
+                         "chrome://tracing or ui.perfetto.dev")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="tracer ring-buffer capacity in spans "
+                         "(drop-oldest)")
+    ap.add_argument("--validate-timing", action="store_true",
+                    help="after the run, join traced per-stage wall "
+                         "times against the per-step model predictions "
+                         "(Alg.-1 est/realized cost, transmission cost) "
+                         "and print the prediction-error / ordering-"
+                         "agreement report to stderr")
     return ap
 
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
-    if args.arch in DLRM_CONFIGS:
-        return run_dlrm(args)
-    return run_lm(args)
+    trace = args.trace_out is not None or args.validate_timing
+    tracer = Tracer(capacity=args.trace_buffer) if trace else None
+    prev = set_tracer(tracer) if trace else None
+    try:
+        if args.arch in DLRM_CONFIGS:
+            metrics = run_dlrm(args)
+        else:
+            metrics = run_lm(args)
+    finally:
+        if trace:
+            set_tracer(prev)
+            if args.trace_out is not None:
+                tracer.export(args.trace_out)
+    if trace:
+        if tracer.dropped:
+            print(f"trace ring dropped {tracer.dropped} oldest spans "
+                  f"(--trace-buffer {args.trace_buffer})", file=sys.stderr)
+        if args.verbose:
+            print("== top spans by total wall time ==", file=sys.stderr)
+            for row in tracer.durations(10):
+                print(f"  {row['name']:<22} n={row['count']:<6} "
+                      f"total={row['total_s']:.4f}s "
+                      f"mean={row['mean_s'] * 1e3:.3f}ms "
+                      f"max={row['max_s'] * 1e3:.3f}ms", file=sys.stderr)
+        if args.validate_timing:
+            report = validate_timing(tracer.events(), metrics)
+            print(format_report(report), file=sys.stderr)
+    return metrics
 
 
 if __name__ == "__main__":

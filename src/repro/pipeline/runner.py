@@ -69,9 +69,28 @@ from __future__ import annotations
 from collections import deque
 from typing import Any, Callable, Iterable, Optional
 
+from repro.obs.trace import get_tracer
+
 from .double_buffer import db_commit, db_init
 
 __all__ = ["PipelinedRunner"]
+
+# Tracing semantics (all spans are host wall time; a no-op unless a
+# tracer is installed via repro.obs, so the traced and untraced loops
+# are bitwise identical):
+#   * "decide" / "repair" / "realized" / "advance" live on the "decide"
+#     track and measure issue time of their jitted stage (jax dispatches
+#     asynchronously; these return before the device finishes).
+#   * "train" is the *in-flight window* of a step: opened when the
+#     step's chain is fully issued (it enters `pending`) and closed when
+#     its drain completes.  Windows of consecutive steps overlap at
+#     depth >= 2, so each lives on its own per-slot track
+#     ("train/<t mod depth>") — decide spans for later steps fall inside
+#     them, which is exactly the decision hiding the exported trace
+#     should show.
+#   * "train.sync" (nested inside the window, same track) is the
+#     blocking part of the drain: train_fn issue plus the record_fn
+#     sync on the concrete loss.
 
 
 class PipelinedRunner:
@@ -119,6 +138,7 @@ class PipelinedRunner:
         """
         if self.decide_ahead:
             return self._run_ahead(batches, steps, record_fn)
+        tr = get_tracer()
         it = iter(batches)
         pending: deque = deque()
         records = []
@@ -135,7 +155,8 @@ class PipelinedRunner:
                 break
             committed = db.front if self.stale else state
             decide_state = db.back if self.stale else state
-            assign, alg1_est = self.decide_fn(decide_state, batch)
+            with tr.span("decide", track="decide", step=t):
+                assign, alg1_est = self.decide_fn(decide_state, batch)
             info = {}
             if alg1_est is not None:
                 info["alg1_est"] = alg1_est
@@ -143,14 +164,19 @@ class PipelinedRunner:
                 # the bounded correction: re-score the stale decision on
                 # the committed state the step actually runs against
                 # (what an exact decide would have read)
-                info["alg1_realized"] = self.realized_cost_fn(
+                with tr.span("realized", track="decide", step=t):
+                    info["alg1_realized"] = self.realized_cost_fn(
+                        committed, batch, assign)
+            with tr.span("advance", track="decide", step=t):
+                train_input, new_state, aux = self.advance_fn(
                     committed, batch, assign)
-            train_input, new_state, aux = self.advance_fn(committed, batch,
-                                                          assign)
             if self.stale:
                 db = db_commit(db, new_state)
             state = new_state
-            pending.append((t, train_input, aux, info))
+            pending.append((t, train_input, aux, info,
+                            tr.start_span("train",
+                                          track=f"train/{t % self.depth}",
+                                          step=t)))
             # keep at most depth-1 advanced steps in flight ahead of train
             while len(pending) >= self.depth:
                 records.append(self._drain_one(pending, record_fn))
@@ -166,6 +192,7 @@ class PipelinedRunner:
         buffered, each made on the newest state committed at its decide
         time — so the decision for step t+a is a commits stale, and the
         decide stream never blocks on the advance chain."""
+        tr = get_tracer()
         it = iter(batches)
         ahead = self.decide_ahead
         pending: deque = deque()
@@ -183,7 +210,8 @@ class PipelinedRunner:
                 except StopIteration:
                     exhausted = True
                     break
-                assign, alg1_est = self.decide_fn(state, batch)
+                with tr.span("decide", track="decide", step=pulled):
+                    assign, alg1_est = self.decide_fn(state, batch)
                 decided.append((batch, assign, alg1_est, state))
                 pulled += 1
             if not decided:
@@ -196,16 +224,22 @@ class PipelinedRunner:
                 # re-assign only the samples whose ids changed state
                 # between decide time and now; everything else keeps its
                 # (still-exact) stale assignment
-                assign, repair_info = self.repair_fn(state, decide_state,
-                                                     batch, assign)
+                with tr.span("repair", track="decide", step=t):
+                    assign, repair_info = self.repair_fn(state, decide_state,
+                                                         batch, assign)
                 info.update(repair_info)
             if self.realized_cost_fn is not None:
-                info["alg1_realized"] = self.realized_cost_fn(state, batch,
+                with tr.span("realized", track="decide", step=t):
+                    info["alg1_realized"] = self.realized_cost_fn(
+                        state, batch, assign)
+            with tr.span("advance", track="decide", step=t):
+                train_input, new_state, aux = self.advance_fn(state, batch,
                                                               assign)
-            train_input, new_state, aux = self.advance_fn(state, batch,
-                                                          assign)
             state = new_state
-            pending.append((t, train_input, aux, info))
+            pending.append((t, train_input, aux, info,
+                            tr.start_span("train",
+                                          track=f"train/{t % self.depth}",
+                                          step=t)))
             while len(pending) >= self.depth:
                 records.append(self._drain_one(pending, record_fn))
             t += 1
@@ -215,8 +249,12 @@ class PipelinedRunner:
         return records
 
     def _drain_one(self, pending: deque, record_fn: Optional[Callable]):
-        t, train_input, aux, info = pending.popleft()
-        loss = self.train_fn(train_input)
-        if record_fn is None:
-            return {"step": t, "loss": float(loss)}
-        return record_fn(t, loss, aux, info)
+        t, train_input, aux, info, window = pending.popleft()
+        try:
+            with get_tracer().span("train.sync", track=window.track, step=t):
+                loss = self.train_fn(train_input)
+                if record_fn is None:
+                    return {"step": t, "loss": float(loss)}
+                return record_fn(t, loss, aux, info)
+        finally:
+            window.end()

@@ -1,0 +1,492 @@
+"""Tests for repro.obs: span tracing, the metrics registry, the bench
+artifact schema/writer, log_step, and predicted-vs-measured validation."""
+import io
+import json
+import math
+import os
+import time
+
+import pytest
+
+from repro.obs import (
+    Gate,
+    MetricsRegistry,
+    SchemaError,
+    Tracer,
+    bench_name_from_path,
+    format_report,
+    get_registry,
+    get_tracer,
+    log_step,
+    set_tracer,
+    use_registry,
+    use_tracer,
+    traced,
+    validate_bench,
+    validate_timing,
+    write_bench,
+)
+from repro.obs.schema import _check_gate, _sweep_finite
+from repro.obs.trace import NOOP
+from repro.pipeline import PipelinedRunner
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------- tracer
+
+class TestTracer:
+    def test_span_records_name_track_args(self):
+        clk = FakeClock()
+        tr = Tracer(capacity=8, clock=clk)
+        clk.t = 1.0
+        with tr.span("decide", track="decide", step=7):
+            clk.t = 1.5
+        (ev,) = tr.events()
+        assert ev["name"] == "decide" and ev["track"] == "decide"
+        assert ev["args"] == {"step": 7}
+        assert ev["ts"] == 1.0 and ev["dur"] == 0.5
+
+    def test_ring_drops_oldest(self):
+        tr = Tracer(capacity=3, clock=FakeClock())
+        for i in range(5):
+            tr.span(f"s{i}").end()
+        assert [e["name"] for e in tr.events()] == ["s2", "s3", "s4"]
+        assert tr.dropped == 2
+
+    def test_end_is_idempotent(self):
+        tr = Tracer(capacity=4, clock=FakeClock())
+        with tr.span("a") as h:
+            h.end()
+        assert len(tr.events()) == 1
+
+    def test_start_span_crosses_scopes(self):
+        clk = FakeClock()
+        tr = Tracer(capacity=4, clock=clk)
+        h = tr.start_span("train", track="train/0", step=0)
+        clk.t = 2.0
+        tr.span("decide", track="decide", step=1).end()
+        clk.t = 3.0
+        h.end()
+        names = [e["name"] for e in tr.events()]   # completion order
+        assert names == ["decide", "train"]
+        train = tr.events()[1]
+        assert train["ts"] == 0.0 and train["dur"] == 3.0
+
+    def test_durations_aggregate(self):
+        clk = FakeClock()
+        tr = Tracer(capacity=8, clock=clk)
+        for dur in (1.0, 3.0):
+            h = tr.span("x")
+            clk.t += dur
+            h.end()
+        h = tr.span("y")
+        clk.t += 10.0
+        h.end()
+        rows = tr.durations()
+        assert rows[0]["name"] == "y" and rows[0]["total_s"] == 10.0
+        assert rows[1] == {"name": "x", "count": 2, "total_s": 4.0,
+                           "mean_s": 2.0, "max_s": 3.0}
+
+    def test_chrome_export_matches_handwritten_oracle(self, tmp_path):
+        """Nested spans on one track against the trace_event document we
+        expect Perfetto to parse: meta row first, X events sorted by ts,
+        microsecond units relative to the trace epoch."""
+        clk = FakeClock()
+        tr = Tracer(capacity=8, clock=clk)        # epoch 0.0
+        clk.t = 1.0
+        outer = tr.start_span("outer", track="main", step=0)
+        clk.t = 2.0
+        inner = tr.span("inner", track="main")
+        clk.t = 3.0
+        inner.end()
+        clk.t = 4.0
+        outer.end()
+        path = tmp_path / "trace.json"
+        tr.export(path)
+        doc = json.loads(path.read_text())
+        pid = os.getpid()
+        thread = tr.events()[0]["thread"]
+        assert doc == {
+            "traceEvents": [
+                {"name": "thread_name", "ph": "M", "pid": pid, "tid": 0,
+                 "args": {"name": "main"}},
+                {"name": "outer", "ph": "X", "cat": "repro", "pid": pid,
+                 "tid": 0, "ts": 1000000.0, "dur": 3000000.0,
+                 "args": {"step": 0, "thread": thread}},
+                {"name": "inner", "ph": "X", "cat": "repro", "pid": pid,
+                 "tid": 0, "ts": 2000000.0, "dur": 1000000.0,
+                 "args": {"thread": thread}},
+            ],
+            "displayTimeUnit": "ms",
+        }
+
+    def test_tracks_become_distinct_tids(self):
+        tr = Tracer(capacity=8, clock=FakeClock())
+        tr.span("a", track="t0").end()
+        tr.span("b", track="t1").end()
+        doc = tr.chrome_trace()
+        meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+        assert {m["args"]["name"] for m in meta} == {"t0", "t1"}
+        assert len({m["tid"] for m in meta}) == 2
+
+    def test_noop_is_default_and_allocation_free(self):
+        assert get_tracer() is NOOP
+        # one shared handle, no per-call state
+        assert NOOP.span("a", track="x", step=1) is NOOP.span("b")
+        assert NOOP.events() == [] and NOOP.durations() == []
+
+    def test_set_tracer_restores(self):
+        tr = Tracer(capacity=4)
+        prev = set_tracer(tr)
+        try:
+            assert get_tracer() is tr
+        finally:
+            set_tracer(prev)
+        assert get_tracer() is NOOP
+        with use_tracer(Tracer(capacity=4)) as t2:
+            assert get_tracer() is t2
+        assert get_tracer() is NOOP
+
+    def test_traced_decorator_resolves_at_call_time(self):
+        @traced("work", track="lib")
+        def work(x):
+            return x + 1
+
+        assert work(1) == 2                      # disabled: plain call
+        with use_tracer(Tracer(capacity=4, clock=FakeClock())) as tr:
+            assert work(2) == 3
+        (ev,) = tr.events()
+        assert ev["name"] == "work" and ev["track"] == "lib"
+
+    def test_overhead_smoke(self):
+        """Loose smoke: 20k noop span sites and 20k live spans both
+        complete far under any per-step budget."""
+        t0 = time.perf_counter()
+        for _ in range(20_000):
+            with get_tracer().span("hot", track="x"):
+                pass
+        noop_s = time.perf_counter() - t0
+        assert noop_s < 1.0, noop_s
+        tr = Tracer(capacity=1024)
+        t0 = time.perf_counter()
+        with use_tracer(tr):
+            for _ in range(20_000):
+                with get_tracer().span("hot", track="x"):
+                    pass
+        live_s = time.perf_counter() - t0
+        assert live_s < 3.0, live_s
+        assert tr.dropped == 20_000 - 1024
+
+
+class TestRunnerBitwise:
+    """The disabled tracer must be invisible to the pipelined runner."""
+
+    @staticmethod
+    def _records(depth, tracer=None):
+        def decide(state, batch):
+            return batch % 3, 0.5 * batch
+
+        def advance(state, batch, assign):
+            return (batch, assign), state + 1, {"aux": batch}
+
+        def train(train_input):
+            b, a = train_input
+            return math.sin(b * 1.7 + a)
+
+        r = PipelinedRunner(decide, advance, train, 0, depth=depth)
+        prev = set_tracer(tracer)
+        try:
+            return r.run(range(10))
+        finally:
+            set_tracer(prev)
+
+    @pytest.mark.parametrize("depth", [1, 2, 3])
+    def test_noop_vs_traced_bitwise(self, depth):
+        base = self._records(depth)                       # NOOP (default)
+        traced_run = self._records(depth, tracer=Tracer(capacity=256))
+        assert base == traced_run                          # float-exact
+
+    def test_traced_runner_emits_expected_spans(self):
+        tr = Tracer(capacity=256)
+        self._records(2, tracer=tr)
+        names = {e["name"] for e in tr.events()}
+        assert {"decide", "advance", "train", "train.sync"} <= names
+        tracks = {e["track"] for e in tr.events() if e["name"] == "train"}
+        assert tracks == {"train/0", "train/1"}
+
+
+# ------------------------------------------------------------- registry
+
+class TestMetricsRegistry:
+    def test_counter_gauge_histogram(self):
+        reg = MetricsRegistry()
+        reg.counter("exchange.wire_bytes").inc(10)
+        reg.counter("exchange.wire_bytes").inc(5)
+        reg.gauge("elastic.n_active").set(8)
+        h = reg.histogram("sim.iter_time_s", keep=True)
+        h.observe(1.0)
+        h.observe(3.0)
+        assert reg.value("exchange.wire_bytes") == 15
+        assert reg.value("elastic.n_active") == 8
+        assert h.samples == [1.0, 3.0] and h.mean == 2.0
+        snap = reg.snapshot()
+        assert snap["sim.iter_time_s"] == {
+            "kind": "histogram", "count": 2, "sum": 4.0,
+            "min": 1.0, "max": 3.0, "mean": 2.0}
+        assert list(snap) == sorted(snap)
+
+    def test_kind_mismatch_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+        with pytest.raises(TypeError):
+            reg.histogram("x")
+
+    def test_record_step_is_legacy_shaped_and_folds_namespace(self):
+        reg = MetricsRegistry()
+        r0 = reg.record_step(0, {"loss": 0.5, "miss_pull": 10,
+                                 "cost": 0.25, "n_active": 7})
+        r1 = reg.record_step(1, {"loss": 0.4, "miss_pull": 3,
+                                 "cost": 0.5, "skipped_unknown": 1})
+        # the legacy view: same dicts, in order, step folded in front
+        assert reg.steps == [r0, r1]
+        assert r0 == {"step": 0, "loss": 0.5, "miss_pull": 10,
+                      "cost": 0.25, "n_active": 7}
+        # counters accumulate, gauges keep the last value
+        assert reg.value("cache.miss_pull") == 13
+        assert reg.value("dispatch.cost_s") == 0.75
+        assert reg.value("train.loss") == 0.4
+        assert reg.value("elastic.n_active") == 7
+        assert "skipped_unknown" not in reg.snapshot()
+
+    def test_use_registry_restores(self):
+        outer = get_registry()
+        with use_registry() as reg:
+            assert get_registry() is reg and reg is not outer
+        assert get_registry() is outer
+
+
+class TestSimulatorRegistry:
+    def test_simresult_metrics_mirror_legacy_fields(self):
+        from repro.core import SimConfig, simulate
+        from repro.data.synthetic import CTRWorkload
+
+        wl = CTRWorkload(name="zipf", model="wdl",
+                         table_sizes=(2_000,) * 4 + (500,) * 8,
+                         zipf_a=(1.1,) * 12, hist_max=8, hist_mean=4.0)
+        cfg = SimConfig(workload=wl, n_workers=4, batch_per_worker=8,
+                        cache_ratio=0.05, embedding_dim=8, iters=4,
+                        warmup=1, mechanism="esd", alpha=1.0)
+        reg = MetricsRegistry()
+        r = simulate(cfg, registry=reg)
+        snap = reg.snapshot()
+        assert r.metrics == snap
+        # legacy fields are reductions of the same registry quantities
+        hits = snap["cache.hits"]["value"]
+        lookups = snap["cache.lookups"]["value"]
+        assert r.hit_ratio == hits / max(lookups, 1)
+        assert snap["sim.iter_cost_s"]["count"] == len(r.per_iter_cost)
+        assert r.decision_time_mean == pytest.approx(
+            snap["dispatch.decision_s"]["mean"], rel=1e-12)
+
+    def test_default_registry_is_fresh_per_call(self):
+        from repro.core import SimConfig, simulate
+        from repro.data.synthetic import CTRWorkload
+
+        wl = CTRWorkload(name="zipf", model="wdl",
+                         table_sizes=(2_000,) * 4 + (500,) * 8,
+                         zipf_a=(1.1,) * 12, hist_max=8, hist_mean=4.0)
+        cfg = SimConfig(workload=wl, n_workers=4, batch_per_worker=8,
+                        cache_ratio=0.05, embedding_dim=8, iters=3,
+                        warmup=1, mechanism="esd", alpha=1.0)
+        a, b = simulate(cfg), simulate(cfg)
+        assert a.metrics == b.metrics         # no cross-run accumulation
+
+
+# ------------------------------------------------------------- log_step
+
+class TestLogStep:
+    def test_stable_key_order(self):
+        buf = io.StringIO()
+        line = log_step({"wall_s": 0.1, "cost": 2.0, "loss": 0.5,
+                         "step": 3, "alg1_est": 1.0}, stream=buf)
+        assert buf.getvalue() == line + "\n"
+        assert list(json.loads(line)) == ["step", "loss", "wall_s",
+                                          "alg1_est", "cost"]
+
+    def test_defaults_to_stderr(self, capsys):
+        log_step({"step": 0, "loss": 1.0})
+        cap = capsys.readouterr()
+        assert cap.out == ""
+        assert json.loads(cap.err) == {"step": 0, "loss": 1.0}
+
+
+# ------------------------------------------------------ schema + writer
+
+class TestSchema:
+    def test_gate_ops(self):
+        doc = {"a": 2.0, "b": [{"v": 1.0}, {"v": 3.0}], "flag": True}
+        ok = [Gate("a", "ge", 2.0), Gate("a", "le", 2.0),
+              Gate("a", "in_range", (1.0, 3.0)), Gate("a", "eq", 2.0),
+              Gate("b[*].v", "gt", 0.0), Gate("flag", "is_true")]
+        errors: list = []
+        for g in ok:
+            _check_gate(doc, g, errors)
+        assert errors == []
+        bad: list = []
+        _check_gate(doc, Gate("b[*].v", "ge", 2.0), bad)
+        assert len(bad) == 1 and "b[0].v" in bad[0]
+
+    def test_missing_required_vs_optional(self):
+        errors: list = []
+        _check_gate({}, Gate("nope", "ge", 0.0), errors)
+        assert errors and "missing" in errors[0]
+        errors = []
+        _check_gate({}, Gate("nope", "ge", 0.0, required=False), errors)
+        assert errors == []
+
+    def test_nan_rejected_anywhere(self):
+        errors: list = []
+        _sweep_finite({"deep": [{"x": math.nan}]}, "", errors)
+        assert errors and "deep[0].x" in errors[0]
+        with pytest.raises(SchemaError, match="non-finite"):
+            validate_bench("dispatch", {
+                "results": [{"V": 1, "jit": {"sparse_ms": 1.0},
+                             "numpy": {"sparse_ms": float("inf")}}]})
+
+    def test_bool_is_not_a_number(self):
+        errors: list = []
+        _check_gate({"x": True}, Gate("x", "ge", 0.0), errors)
+        assert errors and "not a finite number" in errors[0]
+
+    def test_bench_name_from_path(self):
+        assert bench_name_from_path("BENCH_obs.json") == "obs"
+        assert bench_name_from_path("/a/b/BENCH_obs_quick.json") == "obs"
+        assert bench_name_from_path("BENCH_multips_quick.json") == "multips"
+        assert bench_name_from_path("notes.json") is None
+
+    def test_validate_bench_reports_all_violations(self):
+        with pytest.raises(SchemaError) as e:
+            validate_bench("obs", {"bitwise": {"identical": False},
+                                   "overhead": {"frac": 0.5},
+                                   "overlap": {"increases_with_depth": True},
+                                   "trace": {"valid": True, "n_events": 3}})
+        msg = str(e.value)
+        assert "bitwise.identical" in msg and "overhead.frac" in msg
+
+
+class TestWriteBench:
+    GOOD = {"bitwise": {"identical": True}, "overhead": {"frac": 0.001},
+            "overlap": {"increases_with_depth": True},
+            "trace": {"valid": True, "n_events": 10}}
+
+    def test_writes_canonical_and_quick_paths(self, tmp_path):
+        p = write_bench("obs", self.GOOD, results_dir=tmp_path)
+        assert p == tmp_path / "BENCH_obs.json"
+        q = write_bench("obs", self.GOOD, quick=True, results_dir=tmp_path)
+        assert q == tmp_path / "BENCH_obs_quick.json"
+        assert json.loads(p.read_text()) == self.GOOD
+        assert not list(tmp_path.glob("*.tmp"))   # atomic: no leftovers
+
+    def test_out_override(self, tmp_path):
+        p = write_bench("obs", self.GOOD, out=tmp_path / "x.json")
+        assert p == tmp_path / "x.json" and p.exists()
+
+    def test_invalid_report_never_touches_disk(self, tmp_path):
+        bad = {"bitwise": {"identical": False}, "overhead": {"frac": 0.9},
+               "overlap": {"increases_with_depth": False},
+               "trace": {"valid": False, "n_events": 0}}
+        with pytest.raises(SchemaError):
+            write_bench("obs", bad, results_dir=tmp_path)
+        assert list(tmp_path.iterdir()) == []
+
+    def test_mirrors_gauges_into_registry(self, tmp_path):
+        with use_registry() as reg:
+            write_bench("obs", self.GOOD, results_dir=tmp_path)
+        assert reg.value("bench.obs.overhead.frac") == 0.001
+        assert reg.value("bench.obs.trace.n_events") == 10
+
+
+# ----------------------------------------------------- validate_timing
+
+def _ev(name, track, ts, dur, **args):
+    return {"name": name, "track": track, "thread": "t",
+            "ts": ts, "dur": dur, "args": args}
+
+
+class TestValidateTiming:
+    def test_overlap_union_of_train_windows(self):
+        events = [
+            _ev("train", "train/0", 0.0, 2.0, step=0),
+            _ev("train", "train/1", 1.5, 1.0, step=1),   # overlaps slot 0
+            _ev("decide", "decide", 1.0, 1.0, step=1),   # fully hidden
+            _ev("decide", "decide", 3.0, 1.0, step=2),   # not hidden
+            _ev("advance", "decide", 0.0, 5.0, step=0),  # ignored: not decide
+        ]
+        ov = validate_timing(events, [])["overlap"]
+        assert ov["decide_total_s"] == 2.0
+        assert ov["decide_hidden_s"] == 1.0    # union, not double-counted
+        assert ov["hidden_frac"] == 0.5
+        assert ov["n_train_windows"] == 2
+
+    def test_depth1_has_zero_overlap(self):
+        events = [_ev("train", "train/0", 1.0, 1.0, step=0),
+                  _ev("decide", "decide", 0.0, 1.0, step=0),
+                  _ev("decide", "decide", 2.0, 1.0, step=1)]
+        assert validate_timing(events, [])["overlap"]["hidden_frac"] == 0.0
+
+    def test_alg1_ordering_agreement(self):
+        steps = [{"step": 0, "alg1_est": 1.0, "alg1_realized": 1.0},
+                 {"step": 1, "alg1_est": 2.0, "alg1_realized": 3.0},
+                 {"step": 2, "alg1_est": 3.0, "alg1_realized": 2.0}]
+        a = validate_timing([], steps)["alg1"]
+        assert a["n"] == 3
+        o = a["ordering"]
+        assert (o["concordant"], o["discordant"]) == (2, 1)
+        assert o["agreement"] == pytest.approx(2 / 3)
+        assert o["flagged"] == [{"a": 1, "b": 2}]
+        assert a["rel_error"]["max"] == pytest.approx(0.5)
+
+    def test_predicted_vs_wall_joins_on_step(self):
+        events = [_ev("decide", "decide", 0.0, 0.1, step=0),
+                  _ev("decide", "decide", 1.0, 0.3, step=1),
+                  _ev("decide", "decide", 2.0, 0.2, step=2)]
+        steps = [{"step": 0, "cost": 1.0}, {"step": 1, "cost": 3.0},
+                 {"step": 2, "cost": 2.0}]
+        p = validate_timing(events, steps)["predicted_vs_wall"]
+        assert p["train.sync"] is None          # no such spans
+        d = p["decide"]
+        assert d["n"] == 3
+        assert d["ordering"]["agreement"] == 1.0   # perfect rank match
+
+    def test_format_report_renders(self):
+        events = [_ev("decide", "decide", 0.0, 0.1, step=0),
+                  _ev("train", "train/0", 0.0, 1.0, step=0)]
+        steps = [{"step": 0, "loss": 1.0}]
+        text = format_report(validate_timing(events, steps))
+        assert "timing validation" in text and "decide" in text
+
+
+# ------------------------------------------------- driver integration
+
+@pytest.mark.slow
+class TestDriverRegistry:
+    def test_driver_steps_are_registry_view(self):
+        from repro.launch.train import main
+        from repro.obs import get_registry
+
+        metrics = main(["--arch", "wdl-tiny", "--steps", "3",
+                        "--batch-per-worker", "8", "--esd-alpha", "1"])
+        reg = get_registry()
+        assert reg.steps is metrics
+        assert reg.value("train.loss") == metrics[-1]["loss"]
+        assert reg.value("cache.miss_pull") == sum(
+            m["miss_pull"] for m in metrics)

@@ -301,7 +301,9 @@ class TestDriver:
                           "--steps", "4", "--smoke", "--codec", "none"])
         assert base.returncode == 0, base.stderr[-2000:]
         assert none.returncode == 0, none.stderr[-2000:]
-        get = lambda r: [json.loads(l)["loss"] for l in r.stdout.splitlines()
+        # step records go to stderr (obs.log_step); scan both streams
+        get = lambda r: [json.loads(l)["loss"]
+                         for l in (r.stdout + r.stderr).splitlines()
                          if l.startswith("{")]
         assert get(base) == get(none)
 
@@ -309,7 +311,8 @@ class TestDriver:
         res = self._run(["repro.launch.train", "--arch", "wdl-tiny",
                          "--steps", "6", "--smoke", "--codec", "int8"])
         assert res.returncode == 0, res.stderr[-2000:]
-        recs = [json.loads(l) for l in res.stdout.splitlines()
+        recs = [json.loads(l)
+                for l in (res.stdout + res.stderr).splitlines()
                 if l.startswith("{")]
         losses = [r["loss"] for r in recs]
         assert losses and all(np.isfinite(losses))

@@ -32,7 +32,9 @@ class TestTrainDriver:
         res = _run(["repro.launch.train", "--arch", "wdl-tiny", "--steps",
                     "6", "--batch-per-worker", "8", "--esd-alpha", "1.0"])
         assert res.returncode == 0, res.stderr[-2000:]
-        recs = [json.loads(l) for l in res.stdout.splitlines()
+        # step records go to stderr (obs.log_step); scan both streams
+        recs = [json.loads(l)
+                for l in (res.stdout + res.stderr).splitlines()
                 if l.startswith("{")]
         assert recs and np.isfinite(recs[-1]["loss"])
         assert "miss_pull" in recs[-1] and recs[-1]["cost"] >= 0
@@ -42,7 +44,8 @@ class TestTrainDriver:
                     "--steps", "3", "--batch-per-worker", "2",
                     "--seq-len", "16"])
         assert res.returncode == 0, res.stderr[-2000:]
-        recs = [json.loads(l) for l in res.stdout.splitlines()
+        recs = [json.loads(l)
+                for l in (res.stdout + res.stderr).splitlines()
                 if l.startswith("{")]
         assert np.isfinite(recs[-1]["loss"])
 
