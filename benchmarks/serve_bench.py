@@ -1,0 +1,153 @@
+"""Serving benchmark: ESD latency-SLO dispatch vs random at inference QPS.
+
+Virtual-clock serving episodes (:mod:`repro.serve.sim` — deterministic
+given the seed, so the gates ride on simulated, not wall-clock, numbers)
+on the hetero-bandwidth preset (half the workers on 5 Gbps links, half
+on 0.5 Gbps), written to benchmarks/results/BENCH_serve.json:
+
+  * ``reference`` — the headline operating point (qps=9000, slo=5 ms,
+    8 workers, E=512, Zipf drift on): ESD's latency-SLO cost must hold
+    the SLO-violation rate at <= 5% AND beat random dispatch on both
+    p99 latency and violation rate — random keeps landing tail requests
+    (plane misses) on slow links that ESD prices out.
+
+  * ``levels`` — the same episode at two QPS levels (half and full
+    reference load) under Zipf drift, recording p50/p99, QPS-per-worker
+    and plane-staleness age for both mechanisms.
+
+  * ``burst`` — a flash crowd (rate x4 for 0.3 s mid-episode): p99 must
+    stay finite and the episode must absorb the burst (all requests
+    served).
+
+  * ``driver`` (full runs only) — the real-clock driver
+    (repro.launch.serve) at a small QPS on this host: wall-clock p50/p99
+    positive-only, proving the jitted plane-served path paces a live
+    stream.
+
+``--quick`` runs shortened episodes into BENCH_serve_quick.json
+(untracked) so CI smoke never clobbers the tracked record.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.simulator import SimConfig
+from repro.data.synthetic import WORKLOADS
+from repro.obs import write_bench
+from repro.serve import ServeKnobs, simulate_serve
+
+REF_QPS = 9000.0
+REF_SLO_MS = 5.0
+
+
+def _episode(qps: float, duration: float, *, slo_ms: float = REF_SLO_MS,
+             mechanism: str = "esd", burst: bool = False,
+             seed: int = 0) -> dict:
+    knobs = ServeKnobs(
+        qps=qps, duration_s=duration, slo_ms=slo_ms,
+        max_batch=32, max_wait_ms=2.0, ttl_s=0.3,
+        service_ms=0.4, service_us_per_req=60.0,
+        drift_period_s=0.4,
+        burst_at_s=duration * 0.4 if burst else None,
+        burst_dur_s=0.3 if burst else 0.0,
+        burst_x=4.0 if burst else 1.0,
+    )
+    cfg = SimConfig(workload=WORKLOADS["tiny"], n_workers=8,
+                    embedding_dim=512, cache_ratio=0.06,
+                    mechanism=mechanism, seed=seed, serve=knobs)
+    return simulate_serve(cfg).summary()
+
+
+def bench_reference(duration: float) -> dict:
+    esd = _episode(REF_QPS, duration, mechanism="esd")
+    rnd = _episode(REF_QPS, duration, mechanism="random")
+    return {
+        "qps": REF_QPS, "slo_ms": REF_SLO_MS,
+        "esd": esd, "random": rnd,
+        "esd_beats_random_p99": esd["p99_ms"] < rnd["p99_ms"],
+        "esd_beats_random_slo": (esd["slo_violation_rate"]
+                                 < rnd["slo_violation_rate"]),
+    }
+
+
+def bench_levels(duration: float) -> list[dict]:
+    out = []
+    for qps in (REF_QPS / 2, REF_QPS):
+        esd = _episode(qps, duration, mechanism="esd")
+        rnd = _episode(qps, duration, mechanism="random")
+        out.append({"qps": qps, "esd": esd, "random": rnd,
+                    "p99_ratio_random_over_esd":
+                        rnd["p99_ms"] / max(esd["p99_ms"], 1e-12)})
+    return out
+
+
+def bench_burst(duration: float) -> dict:
+    esd = _episode(REF_QPS, duration, mechanism="esd", burst=True)
+    base = _episode(REF_QPS, duration, mechanism="esd", burst=False)
+    return {"esd": esd, "baseline_p99_ms": base["p99_ms"],
+            "burst_x": 4.0,
+            "all_served": esd["n_requests"] > base["n_requests"]}
+
+
+def bench_driver() -> dict:
+    """Real-clock smoke: the launch driver at a tame QPS on this host."""
+    from repro.launch.serve import build_parser, run_serve
+
+    args = build_parser().parse_args(
+        ["--arch", "wdl-tiny", "--qps", "120", "--duration", "1.0",
+         "--slo-ms", "100", "--max-wait-ms", "10"])
+    out = run_serve(args)
+    return {k: out[k] for k in ("p50_ms", "p99_ms", "mean_ms",
+                                "slo_violation_rate", "n_requests")}
+
+
+def run(quick: bool = False, out=None) -> dict:
+    duration = 0.6 if quick else 1.5
+
+    reference = bench_reference(duration)
+    levels = bench_levels(duration)
+    burst = bench_burst(duration)
+
+    report = {
+        "config": {"workload": "tiny", "n_workers": 8,
+                   "embedding_dim": 512, "cache_ratio": 0.06,
+                   "slo_ms": REF_SLO_MS, "duration_s": duration,
+                   "qps_levels": [REF_QPS / 2, REF_QPS],
+                   "bandwidths": "hetero default (half 5, half 0.5 Gbps)"},
+        "reference": reference,
+        "levels": levels,
+        "burst": burst,
+    }
+    if not quick:
+        report["driver"] = bench_driver()
+
+    e, r = reference["esd"], reference["random"]
+    print(f"serve.reference,qps={REF_QPS:.0f},slo={REF_SLO_MS}ms,"
+          f"esd_p99={e['p99_ms']:.2f}ms,random_p99={r['p99_ms']:.2f}ms,"
+          f"esd_slo={e['slo_violation_rate']:.4f},"
+          f"random_slo={r['slo_violation_rate']:.4f}")
+    for lvl in levels:
+        print(f"serve.level,qps={lvl['qps']:.0f},"
+              f"esd_p99={lvl['esd']['p99_ms']:.2f}ms,"
+              f"p99_ratio={lvl['p99_ratio_random_over_esd']:.2f},"
+              f"esd_qpw_max={max(lvl['esd']['qps_per_worker']):.0f}")
+    print(f"serve.burst,x4,esd_p99={burst['esd']['p99_ms']:.2f}ms,"
+          f"baseline_p99={burst['baseline_p99_ms']:.2f}ms,"
+          f"n_req={burst['esd']['n_requests']}")
+    if "driver" in report:
+        d = report["driver"]
+        print(f"serve.driver,p99={d['p99_ms']:.2f}ms,"
+              f"slo_rate={d['slo_violation_rate']:.4f},"
+              f"n_req={d['n_requests']}")
+
+    write_bench("serve", report, quick=quick, out=out)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -7,6 +7,10 @@ prefill a batch of prompts token-by-token into the cache, then greedy-
 decode continuations — exercising the same serve_step the multi-pod
 dry-run lowers at decode_32k / long_500k shapes.  Works across attention,
 SSM (falcon-mamba) and hybrid (recurrentgemma) cache types.
+
+Timing flows through the obs metrics registry (per-step wall histogram
+-> p50/p99) and progress prints as stable-key-order ``log_step`` lines,
+same as the training and serving drivers.
 """
 import argparse
 import sys
@@ -20,6 +24,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ARCH_IDS, get_config  # noqa: E402
 from repro.models import api  # noqa: E402
+from repro.obs import MetricsRegistry, log_step  # noqa: E402
 
 
 def main():
@@ -40,20 +45,36 @@ def main():
 
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
     tok = jnp.asarray(prompts[:, :1], jnp.int32)
+    reg = MetricsRegistry()
+    step_h = reg.histogram("decode.step_s", keep=True)
+    tok_c = reg.counter("decode.tokens")
     t0 = time.perf_counter()
     out_tokens = [np.asarray(tok)]
     for pos in range(max_len - 1):
+        ts = time.perf_counter()
         logits, cache = step(params, tok, cache, jnp.asarray(pos, jnp.int32))
         if pos + 1 < args.prompt_len:            # teacher-forced prefill
             tok = jnp.asarray(prompts[:, pos + 1:pos + 2], jnp.int32)
         else:                                     # greedy decode
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out_tokens.append(np.asarray(tok))
+        step_h.observe(time.perf_counter() - ts)
+        tok_c.inc(args.batch)
+        if pos % 8 == 0 or pos == max_len - 2:
+            log_step({"step": pos, "wall_s": round(time.perf_counter() - t0, 4),
+                      "phase": "prefill" if pos + 1 < args.prompt_len
+                               else "decode",
+                      "step_ms": round((time.perf_counter() - ts) * 1e3, 2)},
+                     stream=sys.stdout)
     dt = time.perf_counter() - t0
     seq = np.concatenate(out_tokens, axis=1)
-    print(f"arch={args.arch} (reduced) batch={args.batch} "
-          f"steps={max_len - 1} wall={dt:.2f}s "
-          f"({(max_len - 1) * args.batch / dt:.1f} tok/s)")
+    log_step({"wall_s": round(dt, 4),
+              "arch": args.arch, "batch": args.batch,
+              "steps": max_len - 1,
+              "tok_per_s": round(tok_c.value / dt, 1),
+              "step_p50_ms": round(step_h.quantile(0.5) * 1e3, 2),
+              "step_p99_ms": round(step_h.quantile(0.99) * 1e3, 2)},
+             stream=sys.stdout)
     for b in range(min(args.batch, 2)):
         print(f"  seq[{b}] prompt={seq[b, :args.prompt_len].tolist()} "
               f"-> gen={seq[b, args.prompt_len:].tolist()}")

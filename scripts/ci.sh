@@ -60,6 +60,10 @@ python -m benchmarks.quant_bench --quick
 # traced depth-2 run, enabled-tracer overhead <= 3%, and the measured
 # decide-inside-train overlap must grow with pipeline depth
 python -m benchmarks.obs_bench --quick
+# serving smoke: the virtual-clock serve episodes (Poisson stream +
+# flash-crowd burst) must report finite p99 and ESD must beat random on
+# both p99 latency and SLO-violation rate at the reference QPS
+python -m benchmarks.serve_bench --quick
 # every BENCH_*.json (tracked full sweeps AND the quick artifacts the
 # gate just wrote) must satisfy the shared schema gates
 python scripts/bench_check.py

@@ -50,7 +50,7 @@ __all__ = [
     "cost_matrix_jnp", "dedup_mask_np", "dedup_mask_jnp", "batch_unique_np",
     "cost_from_state_cols", "cost_matrix_sparse", "cost_matrix_sparse_jnp",
     "per_id_cost_rows_ps", "cost_from_state_cols_ps", "cost_matrix_sparse_ps",
-    "cost_matrix_sparse_ps_jnp",
+    "cost_matrix_sparse_ps_jnp", "miss_time_from_state_cols",
 ]
 
 PAD_ID = -1  # padding slot inside a sample's id list
@@ -289,6 +289,32 @@ def cost_matrix_sparse_jnp(
                             t_tran.astype(jnp.float32)).reshape(k, F, n)
     rows = jnp.where(valid[:, :, None], rows, 0.0)
     return rows.sum(axis=1)
+
+
+def miss_time_from_state_cols(inv: np.ndarray, mask: np.ndarray,
+                              lat_cols: np.ndarray,
+                              t_cols: np.ndarray) -> np.ndarray:
+    """(k, n) pull-ONLY Alg. 1 column: per-request wire time of the miss
+    pulls alone, at a per-(worker, id) link time.
+
+    The serving path's transmission term (repro.serve.cost): a read-only
+    worker never holds dirty rows, so Alg. 1's update-push term vanishes
+    and what remains is the time worker j spends pulling the request's
+    uncached rows from the PS tier.  Equals
+    :func:`cost_from_state_cols` with an all-False dirty plane when
+    ``t_cols`` is column-constant.
+
+    inv/mask come from :func:`batch_unique_np`; lat_cols: (n, U) bool
+    residency at the batch's unique ids; t_cols: (n, U) per-(worker, id)
+    row transmission time (``t_tran[:, None]`` for a single PS,
+    ``t_ps[:, shard_of(uids)]`` for the multi-PS links, codec-priced via
+    :func:`transmission_time_codec` upstream).
+    """
+    n = lat_cols.shape[0]
+    if lat_cols.shape[1] == 0:
+        return np.zeros((inv.shape[0], n), np.float64)
+    miss = (~lat_cols[:, inv]) & mask[None, :, :]          # (n, k, F)
+    return (miss * t_cols[:, inv]).sum(axis=2).T           # (k, n)
 
 
 # --------------------------------------------------------------------------

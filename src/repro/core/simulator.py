@@ -194,6 +194,15 @@ class SimConfig:
     # (the defaults) is the bitwise fp32 path.
     codec: str | None = None
     codec_policy: Literal["uniform", "bandwidth"] = "uniform"
+    # serving mode (repro.serve): a ServeKnobs here switches simulate()
+    # to the request path — micro-batched Poisson/flash-crowd arrivals
+    # dispatched with the latency-SLO cost against read-only TTL cache
+    # planes, returning a ServeResult (p50/p99 latency, SLO-violation
+    # rate, QPS per worker) instead of a SimResult.  mechanism must be
+    # "esd" or "random"; the shared fields (workload, n_workers,
+    # bandwidths, embedding_dim, cache_ratio, alpha, seed, n_ps, codec)
+    # mean the same thing they do for training.
+    serve: "object | None" = None
 
     @property
     def d_tran(self) -> float:
@@ -311,6 +320,9 @@ def simulate(cfg: SimConfig,
     # expressions the old bare-list accumulators used, so results are
     # bitwise-unchanged.  Pass a registry to read the metrics after the
     # run (each call wants a fresh one — counters are cumulative).
+    if cfg.serve is not None:
+        from ..serve.sim import simulate_serve
+        return simulate_serve(cfg, registry)
     reg = registry if registry is not None else MetricsRegistry()
     n, m, k = cfg.n_workers, cfg.batch_per_worker, cfg.k
     bw = cfg.bandwidths if cfg.bandwidths is not None else DEFAULT_BANDWIDTHS(n)

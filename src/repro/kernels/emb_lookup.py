@@ -225,6 +225,88 @@ def staged_gather(
     return out[:, :E]
 
 
+def _kernel_pooled_staged(slots_ref, ids_ref, w_ref, plane_ref, table_ref,
+                          out_ref):
+    b = pl.program_id(0)
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    take = slots_ref[b, f] >= 0
+    w = w_ref[b, f].astype(out_ref.dtype)
+    row = jnp.where(take, plane_ref[...], table_ref[...])
+    out_ref[...] += row.astype(out_ref.dtype) * w
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_e", "interpret"))
+def pooled_lookup_staged(
+    plane_rows: jnp.ndarray,
+    table: jnp.ndarray,
+    slots: jnp.ndarray,
+    ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    block_e: int = DEFAULT_BLOCK_E,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Pooled lookup that READS from the staging plane: per (bag, slot),
+    ``row = plane_rows[slots[b, f]]`` when a live staging slot holds the
+    id (``slots[b, f] >= 0``), else ``table[ids[b, f]]`` — the serving
+    read path (repro.serve): a TTL-refreshed cache plane answers the
+    lookup and only plane misses touch the canonical PS table.
+
+    Both candidate rows stream in through the BlockSpec ``index_map``
+    (the slot/id arrays ride scalar prefetch) and the kernel selects
+    in-register, mirroring :func:`staged_gather`'s grid-select idiom —
+    one launch, no host-side merge of the two sources.
+
+    plane_rows: (C, E); table: (V, E); slots: (B, F) int32 staging-slot
+    index per lookup (-1 = canonical table; the caller projects the
+    plane with ``repro.pipeline.prefetch.slot_map``); ids: (B, F) int32,
+    PAD = -1 (weight forced to 0).  Returns (B, E) f32 pooled sums.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, F = ids.shape
+    V, E = table.shape
+    if weights is None:
+        weights = jnp.ones((B, F), jnp.float32)
+    valid = ids >= 0
+    ids_c = jnp.where(valid, ids, 0).astype(jnp.int32)
+    slots_c = jnp.asarray(slots).astype(jnp.int32)
+    w = jnp.where(valid, weights, 0.0).astype(jnp.float32)
+
+    pad_e = (-E) % block_e
+    tbl = jnp.pad(table, ((0, 0), (0, pad_e))) if pad_e else table
+    pln = jnp.pad(plane_rows, ((0, 0), (0, pad_e))) if pad_e else plane_rows
+    Ep = E + pad_e
+    n_e = Ep // block_e
+
+    out = pl.pallas_call(
+        _kernel_pooled_staged,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, n_e, F),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, block_e),
+                    lambda b, e, f, s_, ids_, w_:
+                        (jnp.maximum(s_[b, f], 0), e)),
+                pl.BlockSpec((1, block_e),
+                             lambda b, e, f, s_, ids_, w_: (ids_[b, f], e)),
+            ],
+            out_specs=pl.BlockSpec((1, block_e),
+                                   lambda b, e, f, s_, ids_, w_: (b, e)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Ep), jnp.float32),
+        interpret=interpret,
+    )(slots_c, ids_c, w, pln, tbl)
+    return out[:, :E]
+
+
 def _kernel_quant(ids_ref, w_ref, codes_ref, scale_ref, zp_ref, out_ref,
                   *, block_e, B_grp, G, E):
     b = pl.program_id(0)

@@ -79,20 +79,28 @@ def _mlp(layers, x):
     return x
 
 
-def forward(params, cfg: DLRMConfig, sparse_ids, dense, n_fields=None):
+def forward(params, cfg: DLRMConfig, sparse_ids, dense, n_fields=None,
+            emb_all=None):
     """sparse_ids: (B, W) flat ids (W = fixed fields + multi-hot history
     slots, PAD=-1); dense: (B, n_dense) -> logits (B,).
 
     Multi-PS: the tables may arrive PS-stacked as (n_ps, max_rows, ...)
     (repro.ps convention) with ids already PS-linearized — the stack
     flattens so row ``p * max_rows + local`` is PS ``p``'s ``local`` row.
+
+    ``emb_all`` injects pre-gathered (B, W, E) embedding rows (PAD rows
+    already zeroed) in place of the canonical-table gather — the serving
+    path (repro.serve.step) reads rows from its TTL cache plane and runs
+    the identical interaction stack; ``None`` keeps the training gather
+    bitwise.
     """
     from ..data.synthetic import WORKLOADS
     F = n_fields if n_fields is not None else WORKLOADS[cfg.workload].n_fields
     F = min(F, sparse_ids.shape[1])
     valid = sparse_ids >= 0
     ids = jnp.where(valid, sparse_ids, 0)
-    emb_all = _flat_table(params["embed"])[ids] * valid[..., None]  # (B, W, E)
+    if emb_all is None:
+        emb_all = _flat_table(params["embed"])[ids] * valid[..., None]  # (B, W, E)
     # interaction blocks: fields as-is, history mean-pooled into one block
     fields = emb_all[:, :F]
     hist = emb_all[:, F:]

@@ -94,6 +94,34 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else math.nan
 
+    def quantile(self, q: float) -> float:
+        """The q-quantile (linear interpolation, numpy default) of the
+        retained samples — p50 is ``quantile(0.5)``, p99
+        ``quantile(0.99)``.
+
+        Needs ``keep=True`` (quantiles are not computable from the
+        streaming count/sum/min/max alone): a ``keep=False`` histogram
+        raises TypeError rather than silently answering from the wrong
+        statistics.  An empty histogram returns NaN (same convention as
+        :attr:`mean`); a single sample is every quantile of itself.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile q must be in [0, 1], got {q}")
+        if self.samples is None:
+            raise TypeError(
+                f"histogram {self.name!r} was created with keep=False; "
+                f"quantiles need the retained samples (keep=True)")
+        if not self.samples:
+            return math.nan
+        xs = sorted(float(v) for v in self.samples)
+        if len(xs) == 1:
+            return xs[0]
+        pos = q * (len(xs) - 1)
+        lo = int(math.floor(pos))
+        hi = min(lo + 1, len(xs) - 1)
+        frac = pos - lo
+        return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
     def snapshot(self) -> dict:
         return {"kind": self.kind, "count": self.count, "sum": self.sum,
                 "min": self.min if self.count else None,

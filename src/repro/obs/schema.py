@@ -143,6 +143,21 @@ SCHEMAS: dict[str, list[Gate]] = {
         Gate("results.fp32.final_loss", "in_range", (0.0, 10.0)),
         Gate("results.int8.quant.byte_reduction", "ge", 4.0),
     ],
+    "serve": [
+        # virtual-clock simulated latencies — deterministic given the
+        # seed, so the ESD-vs-random separation gates hard
+        Gate("reference.esd.slo_violation_rate", "le", 0.05),
+        Gate("reference.esd_beats_random_p99", "is_true"),
+        Gate("reference.esd_beats_random_slo", "is_true"),
+        Gate("reference.esd.p50_ms", "gt", 0.0),
+        Gate("reference.esd.p99_ms", "gt", 0.0),
+        Gate("levels[*].esd.p99_ms", "gt", 0.0),
+        Gate("levels[*].esd.n_requests", "gt", 0),
+        Gate("levels[*].esd.qps_per_worker[*]", "ge", 0.0),
+        Gate("burst.esd.p99_ms", "gt", 0.0),
+        # real-clock driver smoke (full runs only): wall clock, positive
+        Gate("driver.p99_ms", "gt", 0.0, required=False),
+    ],
     "obs": [
         Gate("bitwise.identical", "is_true"),
         Gate("overhead.frac", "le", 0.03),

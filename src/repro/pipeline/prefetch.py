@@ -51,7 +51,7 @@ from ..kernels.emb_lookup import staged_gather
 from ..quant.codecs import fake_quant, get_codec
 
 __all__ = ["PrefetchPlane", "prefetch_init", "prefetch_candidates",
-           "prefetch_step", "staged_membership"]
+           "prefetch_step", "staged_membership", "slot_map"]
 
 
 @functools.partial(jax.tree_util.register_dataclass,
@@ -185,6 +185,27 @@ def prefetch_step(plane: PrefetchPlane, table: jnp.ndarray,
     n_pulled = take.sum().astype(jnp.int32)
     return PrefetchPlane(ids=new_ids, rows=new_rows,
                          expiry=new_exp), n_pulled
+
+
+@functools.partial(jax.jit, static_argnames=("V",))
+def slot_map(plane: PrefetchPlane, V: int, step) -> jnp.ndarray:
+    """(V,) int32: the staging slot holding id x's live row at ``step``,
+    -1 where no live slot exists.
+
+    The projection the *serving* read path needs
+    (:mod:`repro.serve.plane`): where :func:`staged_membership` only
+    answers "is a fresh copy staged?", ``slot_map`` answers "which slot
+    do I read it from?", so a lookup can gather plane rows directly and
+    fall back to the canonical table per id.  If an id ever occupied two
+    live slots the highest slot wins (deterministic; the prefetch and
+    TTL admit paths never double-stage an id).
+    """
+    step = jnp.asarray(step, jnp.int32)
+    alive = (plane.ids >= 0) & (plane.expiry >= step)
+    idx = jnp.where(alive, plane.ids, V)
+    C = plane.ids.shape[0]
+    return jnp.full((V,), -1, jnp.int32).at[idx].max(
+        jnp.arange(C, dtype=jnp.int32), mode="drop")
 
 
 @functools.partial(jax.jit, static_argnames=("V",))

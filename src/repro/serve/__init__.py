@@ -1,0 +1,41 @@
+"""repro.serve — online serving path for the ESD stack.
+
+Training taught the stack to move embedding *samples* cheaply; a
+deployed recommender spends most of its life answering inference
+requests.  This package reuses the same machinery for the request path
+(FlexEMR-style disaggregation, see PAPERS.md):
+
+* :mod:`.stream` — seeded Poisson / flash-crowd request arrivals with
+  Zipf drift, an admission queue, and the continuous micro-batcher
+  (batch-close policy: max-wait-or-max-size).
+* :mod:`.cost` — the latency-SLO cost term that replaces Alg. 1's
+  iteration-time objective: estimated completion latency per (request,
+  worker) = queue drain + service + miss-pull wire time, plus a hinge
+  penalty past the request's deadline.  Queue-depth-aware: a loaded
+  worker prices itself out.
+* :mod:`.plane` — read-only per-worker cache planes with TTL-based
+  refresh from the PS tier (:class:`repro.pipeline.prefetch.
+  PrefetchPlane` reused in serve mode; refresh pulls ride the quantized
+  exchange wire format).
+* :mod:`.step` — the jitted ``serve_step``: staged-plane pooled lookup
+  (:func:`repro.kernels.emb_lookup.pooled_lookup_staged`) + dense
+  forward only; no optimizer, no push.
+* :mod:`.sim` — the virtual-clock :func:`simulate_serve` behind
+  ``SimConfig.serve`` (p50/p99 latency, QPS-per-worker, SLO-violation
+  rate, cache-staleness age — all obs registry histograms).
+
+The real-clock driver is ``python -m repro.launch.serve``.
+"""
+from .cost import serve_cost_matrix, serve_decide
+from .plane import plane_ages, refresh_plane, seed_plane
+from .sim import ServeKnobs, ServeResult, simulate_serve
+from .step import make_serve_step, staged_emb_all
+from .stream import MicroBatch, StreamConfig, micro_batches, request_arrivals
+
+__all__ = [
+    "StreamConfig", "MicroBatch", "request_arrivals", "micro_batches",
+    "serve_cost_matrix", "serve_decide",
+    "seed_plane", "refresh_plane", "plane_ages",
+    "make_serve_step", "staged_emb_all",
+    "ServeKnobs", "ServeResult", "simulate_serve",
+]

@@ -1,0 +1,92 @@
+"""Latency-SLO dispatch cost for the serving path.
+
+Training's Alg. 1 scores an assignment by expected *transmission* time —
+the right objective when every iteration is a barrier.  A serving
+request cares about its own completion latency against a deadline, so
+the cost of placing request i on worker j becomes the estimated
+completion latency plus a hinge penalty past the request's remaining
+SLO slack:
+
+    est_lat[i, j] = queue_s[j] + service_s[j] + pull[i, j]
+    C[i, j]       = est_lat[i, j]
+                    + slo_penalty * max(0, est_lat[i, j] - slack_s[i])
+
+* ``pull[i, j]`` is the read-only Alg.-1 column — miss pulls only, no
+  dirty-push term (serving never writes) — at the per-(worker, PS) link
+  time, built from the same sparse touched-ids engine
+  (:func:`repro.core.cost.batch_unique_np` +
+  :func:`repro.core.cost.miss_time_from_state_cols`) the training
+  dispatcher uses, codec-priced via ``transmission_time_codec``.
+* ``queue_s[j]`` is worker j's current queue-drain estimate — the
+  queue-depth term that makes a loaded worker price itself out (the
+  serve twin of the elastic straggler column bias, and exactly what
+  ``esd_decide(col_bias=)`` accepts on the jit path).
+* the hinge activates only where the estimate would blow the deadline,
+  so under light load the objective degrades to pure latency and the
+  dispatcher behaves like pull-time-optimal ESD.
+
+Assignment is the paper's own Alg. 2 (:func:`repro.core.hybrid.
+hybrid_dispatch`) on this matrix — the serving path swaps the cost
+column, not the solver.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.cost import batch_unique_np, miss_time_from_state_cols
+from ..core.hybrid import hybrid_dispatch
+
+__all__ = ["serve_cost_matrix", "serve_decide"]
+
+
+def serve_cost_matrix(samples: np.ndarray, resident: np.ndarray,
+                      t_row: np.ndarray, queue_s: np.ndarray,
+                      service_s: np.ndarray, slack_s: np.ndarray,
+                      *, slo_penalty: float = 4.0,
+                      part=None) -> np.ndarray:
+    """(B, n) latency-SLO cost matrix (module docstring equation).
+
+    samples: (B, W) flat ids, PAD = -1 (PAD rows cost the queue/service
+    floor only); resident: (n, V) bool read-only plane residency;
+    t_row: per-embedding-row link time — (n,) single-PS or (n, n_ps)
+    with ``part`` (:class:`repro.ps.PsPartition`); queue_s/service_s:
+    (n,) seconds; slack_s: (B,) seconds until each request's deadline
+    (``inf`` disables the hinge for that row — PAD rows pass inf).
+    """
+    samples = np.asarray(samples)
+    t_row = np.asarray(t_row, np.float64)
+    queue_s = np.asarray(queue_s, np.float64)
+    service_s = np.asarray(service_s, np.float64)
+    slack_s = np.asarray(slack_s, np.float64)
+    n = resident.shape[0]
+    _, mask, uids, inv = batch_unique_np(samples)
+    lat_cols = np.asarray(resident)[:, uids] if uids.size else \
+        np.zeros((n, 0), bool)
+    if t_row.ndim == 1:
+        t_cols = np.broadcast_to(t_row[:, None], (n, max(uids.size, 1)))
+    else:
+        if part is None:
+            raise ValueError("t_row (n, n_ps) needs part")
+        shard_u = np.asarray(part.shard_of(uids)) if uids.size else \
+            np.zeros(1, np.int64)
+        t_cols = t_row[:, shard_u]
+    if uids.size == 0:
+        pull = np.zeros((samples.shape[0], n), np.float64)
+    else:
+        pull = miss_time_from_state_cols(inv, mask, lat_cols, t_cols)
+    est_lat = queue_s[None, :] + service_s[None, :] + pull
+    over = np.maximum(est_lat - slack_s[:, None], 0.0)
+    over = np.where(np.isfinite(slack_s)[:, None], over, 0.0)
+    return est_lat + slo_penalty * over
+
+
+def serve_decide(C: np.ndarray, *, cap: int, alpha: float = 1.0,
+                 opt: str = "ssp") -> np.ndarray:
+    """(B,) worker per request: Alg. 2 on the latency-SLO matrix.
+
+    ``cap`` bounds requests per worker within one micro-batch (the
+    queue term is frozen during the batch, so an uncapped solve could
+    pile the whole batch onto the momentarily-cheapest worker);
+    ``alpha`` splits Opt/Heu exactly as in training dispatch.
+    """
+    return hybrid_dispatch(C, cap, alpha, opt=opt)

@@ -1,0 +1,118 @@
+"""Read-only per-worker cache planes with TTL-based refresh.
+
+Serve mode reuses :class:`repro.pipeline.prefetch.PrefetchPlane` with
+the ``expiry`` field reinterpreted: training stamps an id's *last
+scheduled use*; serving stamps a *freshness deadline* ``refreshed_at +
+ttl``.  The rowwise-adagrad freshness invariant the training plane
+needed is trivially satisfied here — serving never writes — so lookups
+are finally *served from the plane*
+(:func:`repro.kernels.emb_lookup.pooled_lookup_staged`): a row answers
+from its staged copy until the TTL lapses, then the next refresh pulls
+the current PS-tier value over the quantized exchange wire format
+(``fake_quant``, exactly what the training exchange would deliver).
+
+The step clock is the micro-batch sequence number (int32, matching the
+plane dtype); callers convert wall-clock TTLs with their own batch
+cadence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.emb_lookup import staged_gather
+from ..pipeline.prefetch import PrefetchPlane, prefetch_init
+from ..quant.codecs import fake_quant, get_codec
+
+__all__ = ["seed_plane", "refresh_plane", "plane_ages"]
+
+
+def seed_plane(table, ids: np.ndarray, *, step: int, ttl: int,
+               codec=None, use_pallas: bool = False,
+               interpret: bool | None = None) -> PrefetchPlane:
+    """A fresh serve plane holding ``ids``'s rows, all stamped
+    ``expiry = step + ttl``.  ``ids`` (C,) must be unique; the plane
+    capacity is exactly ``len(ids)`` (the worker's read-only cached
+    shard).  With a ``codec`` the seeded rows already carry the wire
+    format, like every later refresh."""
+    ids = np.asarray(ids, np.int32)
+    if ids.size and len(np.unique(ids)) != ids.size:
+        raise ValueError("seed_plane ids must be unique")
+    plane = prefetch_init(int(ids.size), int(table.shape[1]))
+    plane = PrefetchPlane(
+        ids=jnp.asarray(ids),
+        rows=plane.rows,
+        expiry=jnp.full((ids.size,), int(step) + int(ttl), jnp.int32),
+    )
+    # pull every row through the refresh path (same codec treatment)
+    return _pull_rows(plane, jnp.asarray(table),
+                      jnp.ones((ids.size,), bool), codec=codec,
+                      use_pallas=use_pallas, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "use_pallas",
+                                             "interpret"))
+def _pull_rows(plane: PrefetchPlane, table, which, *, codec=None,
+               use_pallas: bool = False,
+               interpret: bool | None = None) -> PrefetchPlane:
+    """Re-pull ``which`` slots' rows from ``table`` (wire-format via
+    ``codec``), carrying every other slot through.  ``use_pallas``
+    routes the exact-fp32 pull through the :func:`staged_gather` kernel
+    (accelerator path; the default jnp gather is the same selection and
+    is what a CPU real-time loop can afford)."""
+    V = table.shape[0]
+    src = jnp.where(which & (plane.ids >= 0),
+                    jnp.clip(plane.ids, 0, V - 1), -1).astype(jnp.int32)
+    c = get_codec(codec)
+    if c is None and use_pallas:
+        rows = staged_gather(plane.rows, table, src, interpret=interpret)
+    else:
+        pulled = table[jnp.clip(src, 0, V - 1)]
+        if c is not None:
+            pulled = fake_quant(pulled, c)
+        rows = jnp.where((src >= 0)[:, None], pulled, plane.rows)
+    return PrefetchPlane(ids=plane.ids, rows=rows, expiry=plane.expiry)
+
+
+@functools.partial(jax.jit, static_argnames=("ttl", "budget", "codec",
+                                             "use_pallas", "interpret"))
+def refresh_plane(plane: PrefetchPlane, table, step, *, ttl: int,
+                  budget: int | None = None, codec=None,
+                  use_pallas: bool = False,
+                  interpret: bool | None = None):
+    """One TTL round: re-pull up to ``budget`` expired rows.
+
+    A slot is due when ``expiry <= step``.  Refreshed slots get
+    ``expiry = step + ttl``; with a ``budget`` the stalest slots (lowest
+    expiry = longest past deadline) go first and the rest stay served
+    from their old rows until a later round — refresh traffic is
+    rate-limited, staleness degrades gracefully.  Returns
+    ``(new_plane, n_refreshed)``.
+    """
+    step = jnp.asarray(step, jnp.int32)
+    C = plane.ids.shape[0]
+    due = (plane.ids >= 0) & (plane.expiry <= step)
+    if budget is not None:
+        order = jnp.argsort(jnp.where(due, plane.expiry, jnp.iinfo(
+            jnp.int32).max), stable=True)
+        rank = jnp.zeros((C,), jnp.int32).at[order].set(
+            jnp.arange(C, dtype=jnp.int32))
+        due = due & (rank < budget)
+    plane = _pull_rows(plane, table, due, codec=codec,
+                       use_pallas=use_pallas, interpret=interpret)
+    new_exp = jnp.where(due, step + ttl, plane.expiry)
+    return (PrefetchPlane(ids=plane.ids, rows=plane.rows, expiry=new_exp),
+            due.sum().astype(jnp.int32))
+
+
+def plane_ages(plane: PrefetchPlane, step, *, ttl: int) -> np.ndarray:
+    """(C,) staleness age in steps of every occupied slot (host side):
+    ``step - refreshed_at`` with ``refreshed_at = expiry - ttl``.  Empty
+    slots report -1.  Feeds the ``serve.staleness_age`` histogram."""
+    ids = np.asarray(plane.ids)
+    exp = np.asarray(plane.expiry)
+    age = int(step) - (exp - int(ttl))
+    return np.where(ids >= 0, age, -1)

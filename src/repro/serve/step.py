@@ -1,0 +1,84 @@
+"""The jitted serve step: staged-plane lookup + dense forward only.
+
+FlexEMR-style disaggregation: the embedding-lookup half answers from the
+worker's read-only TTL cache plane (only plane misses touch the
+canonical PS table) and the dense half is the unchanged DLRM interaction
+stack — no optimizer state, no gradient, no push.  Each call returns
+
+* ``logits`` (B,) — the CTR answer, built on plane-served embedding rows
+  injected into :func:`repro.models.dlrm.forward`;
+* ``pooled`` (B, E) — the multi-hot history bag served by the fused
+  Pallas staged read path
+  (:func:`repro.kernels.emb_lookup.pooled_lookup_staged`), i.e. the
+  disaggregated embedding-service payload a remote dense tier would
+  consume.
+
+Refreshing a plane row changes both outputs; retraining the canonical
+table does NOT until the TTL lapses — pinned in tests/test_serve.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.dlrm_configs import DLRMConfig
+from ..kernels.emb_lookup import pooled_lookup_staged
+from ..models.dlrm import _flat_table, forward
+from ..pipeline.prefetch import PrefetchPlane, slot_map
+
+__all__ = ["staged_emb_all", "make_serve_step"]
+
+
+def staged_emb_all(plane: PrefetchPlane, table, sparse_ids, step):
+    """(B, W, E) embedding rows with the plane override: slot-served
+    where a live staged copy exists, canonical table elsewhere, zero on
+    PAD.  Also returns the (B, W) slot indices (-1 = table) so callers
+    can reuse the projection (e.g. for the pooled kernel)."""
+    V, _ = table.shape
+    C = plane.ids.shape[0]
+    valid = sparse_ids >= 0
+    ids = jnp.where(valid, sparse_ids, 0).astype(jnp.int32)
+    smap = slot_map(plane, V, step)                      # (V,) int32
+    slots = jnp.where(valid, smap[ids], -1)              # (B, W)
+    from_plane = plane.rows[jnp.clip(slots, 0, C - 1)]
+    rows = jnp.where((slots >= 0)[..., None], from_plane, table[ids])
+    return rows * valid[..., None], slots
+
+
+def make_serve_step(cfg: DLRMConfig, n_fields: int, *,
+                    use_pallas: bool = False,
+                    interpret: bool | None = None):
+    """Build the jitted ``serve_step(params, plane, sparse, dense, step)
+    -> (logits, pooled)`` for one DLRM config.
+
+    ``sparse`` is the micro-batch's fixed-shape (B, W) id block (PAD
+    rows included — their logits are garbage the caller masks by batch
+    ``n``); ``step`` is the plane's freshness clock (micro-batch
+    sequence number).  Compiles once per batch shape.
+
+    ``use_pallas`` routes the pooled history bag through the fused
+    :func:`repro.kernels.emb_lookup.pooled_lookup_staged` kernel (the
+    accelerator path; interpret mode off-TPU is too slow for a real-time
+    loop); the default jnp path sums the same plane-override rows —
+    tests pin the two equal.
+    """
+    F = n_fields
+
+    @functools.partial(jax.jit, static_argnames=())
+    def serve_step(params, plane: PrefetchPlane, sparse, dense, step):
+        table = _flat_table(params["embed"])
+        emb_all, slots = staged_emb_all(plane, table, sparse, step)
+        logits = forward(params, cfg, sparse, dense, n_fields=F,
+                         emb_all=emb_all)
+        hist_ids = sparse[:, F:].astype(jnp.int32)
+        if use_pallas:
+            pooled = pooled_lookup_staged(plane.rows, table, slots[:, F:],
+                                          hist_ids, interpret=interpret)
+        else:
+            pooled = emb_all[:, F:].sum(axis=1)
+        hn = jnp.maximum((hist_ids >= 0).sum(axis=1, keepdims=True), 1)
+        return logits, pooled / hn
+
+    return serve_step

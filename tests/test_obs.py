@@ -274,6 +274,42 @@ class TestMetricsRegistry:
         assert get_registry() is outer
 
 
+class TestHistogramQuantile:
+    def _hist(self, values, keep=True):
+        h = MetricsRegistry().histogram("h", keep=keep)
+        for v in values:
+            h.observe(v)
+        return h
+
+    def test_linear_interpolation_matches_numpy(self):
+        import numpy as np
+        vals = [5.0, 1.0, 3.0, 2.0, 4.0, 9.0, 0.5]
+        h = self._hist(vals)
+        for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+            assert h.quantile(q) == pytest.approx(
+                float(np.quantile(vals, q)))
+
+    def test_empty_returns_nan(self):
+        assert math.isnan(self._hist([]).quantile(0.5))
+
+    def test_single_sample_is_every_quantile(self):
+        h = self._hist([7.25])
+        for q in (0.0, 0.5, 0.99, 1.0):
+            assert h.quantile(q) == 7.25
+
+    def test_keep_false_raises_typeerror(self):
+        h = self._hist([1.0, 2.0], keep=False)
+        with pytest.raises(TypeError, match="keep"):
+            h.quantile(0.5)
+
+    def test_out_of_range_q_raises(self):
+        h = self._hist([1.0])
+        with pytest.raises(ValueError):
+            h.quantile(-0.01)
+        with pytest.raises(ValueError):
+            h.quantile(1.01)
+
+
 class TestSimulatorRegistry:
     def test_simresult_metrics_mirror_legacy_fields(self):
         from repro.core import SimConfig, simulate
